@@ -1,0 +1,47 @@
+"""Render the §Roofline markdown table from dry-run JSON files."""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+
+def load(paths):
+    cells = []
+    for p in paths:
+        if os.path.exists(p):
+            with open(p) as f:
+                cells.extend(json.load(f))
+    return cells
+
+
+def fmt(cells):
+    rows = []
+    rows.append(
+        "| arch | shape | mesh | compute s | memory s | collective s | "
+        "dominant | useful/HLO | MFU bound |")
+    rows.append("|---|---|---|---|---|---|---|---|---|")
+    for c in cells:
+        if c.get("status") == "skipped":
+            rows.append(
+                f"| {c['arch']} | {c['shape']} | {c['mesh']} | — | — | — | "
+                f"skip: {c['reason'][:40]}… | — | — |")
+            continue
+        if c.get("status") != "ok":
+            rows.append(
+                f"| {c['arch']} | {c['shape']} | {c['mesh']} | — | — | — | "
+                f"**FAILED** | — | — |")
+            continue
+        rows.append(
+            f"| {c['arch']} | {c['shape']} | {c['mesh']} "
+            f"| {c['compute_s']:.3f} | {c['memory_s']:.3f} "
+            f"| {c['collective_s']:.3f} | {c['dominant']} "
+            f"| {c.get('useful_flops_fraction', 0):.2f} "
+            f"| {c.get('mfu_bound', 0):.3f} |")
+    return "\n".join(rows)
+
+
+if __name__ == "__main__":
+    paths = sys.argv[1:] or ["dryrun_singlepod.json", "dryrun_multipod.json"]
+    print(fmt(load(paths)))

@@ -1,0 +1,23 @@
+"""Theorem 1 table: rounds and ⊕ applications vs p for the three
+exclusive-scan algorithms (exact, from the message-schedule oracle)."""
+
+from __future__ import annotations
+
+from repro.core import oracle
+
+PS = (4, 8, 16, 32, 36, 64, 128, 256, 512, 1024)
+
+
+def run(csv_rows: list):
+    for p in PS:
+        for alg in ("two_op", "1doubling", "123"):
+            st = oracle.verify(p, alg)
+            csv_rows.append((f"rounds/{alg}/p{p}", st.rounds, "rounds"))
+            csv_rows.append((f"ops/{alg}/p{p}", st.result_path_ops,
+                             "oplus_result_path"))
+    return csv_rows
+
+
+if __name__ == "__main__":
+    for r in run([]):
+        print(",".join(str(x) for x in r))

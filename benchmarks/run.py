@@ -1,0 +1,73 @@
+"""Benchmark harness: one module per paper table/figure + roofline.
+
+Prints ``name,value,derived`` CSV.  Modules:
+  * round_counts          — Theorem 1 rounds/⊕ table (exact)
+  * exscan_table1         — paper Table 1/Fig 1 analogue (measured on a
+                            fake-device mesh + α-β-γ modeled for pods)
+  * moe_dispatch          — in-situ MoE layer, exscan algorithm sweep
+  * ssm_context_parallel  — in-situ CP-SSM prefill, algorithm sweep
+  * roofline summary      — from the latest dry-run JSON, if present
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+import traceback
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+sys.path.insert(0, os.path.join(os.path.dirname(HERE), "src"))
+sys.path.insert(0, os.path.dirname(HERE))
+
+DRYRUN_JSON = os.path.join(os.path.dirname(HERE), "dryrun_results.json")
+
+
+def roofline_rows(csv_rows: list):
+    if not os.path.exists(DRYRUN_JSON):
+        return csv_rows
+    with open(DRYRUN_JSON) as f:
+        cells = json.load(f)
+    for c in cells:
+        if c.get("status") != "ok":
+            continue
+        if c.get("mesh") != "16x16":
+            continue  # multi-pod pass is compile-proof only (no probes)
+        key = f"roofline/{c['arch']}/{c['shape']}/{c['mesh']}"
+        csv_rows.append((key + "/bound_ms",
+                         1e3 * max(c["compute_s"], c["memory_s"],
+                                   c["collective_s"]),
+                         c["dominant"]))
+        csv_rows.append((key + "/mfu_bound", c["mfu_bound"], "fraction"))
+    return csv_rows
+
+
+def main() -> None:
+    from benchmarks import exscan_table1, moe_dispatch, round_counts, \
+        ssm_context_parallel
+
+    rows: list = []
+    modules = [
+        ("round_counts", round_counts.run),
+        ("exscan_table1", exscan_table1.run),
+        ("moe_dispatch", moe_dispatch.run),
+        ("ssm_context_parallel", ssm_context_parallel.run),
+        ("roofline", roofline_rows),
+    ]
+    failures = 0
+    for name, fn in modules:
+        try:
+            fn(rows)
+        except Exception:  # noqa: BLE001
+            failures += 1
+            print(f"# BENCH FAILED: {name}", file=sys.stderr)
+            traceback.print_exc()
+    print("name,value,derived")
+    for r in rows:
+        print(",".join(str(x) for x in r))
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

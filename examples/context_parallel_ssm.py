@@ -1,0 +1,63 @@
+"""Context-parallel SSM prefill: the paper's headline scenario.
+
+A 32k-token sequence is sharded over 8 devices; each device scans its
+chunk locally and the cross-device carry-in states are computed with an
+exclusive prefix scan under the (expensive, non-commutative) AFFINE
+state-composition operator.  123-doubling does this in
+q = ceil(log2(p-1) + log2 4/3) rounds with q-1 compositions.
+
+    python examples/context_parallel_ssm.py
+"""
+
+import os
+
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=8")
+
+import sys  # noqa: E402
+import time  # noqa: E402
+
+sys.path.insert(0, os.path.join(os.path.dirname(
+    os.path.dirname(os.path.abspath(__file__))), "src"))
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+from jax.sharding import Mesh  # noqa: E402
+
+import repro.core.collectives as collectives  # noqa: E402
+from repro.models.context_parallel import cp_ssm_scan  # noqa: E402
+from repro.models.mamba import ssm_scan_chunked  # noqa: E402
+
+
+def main():
+    p = 8
+    mesh = Mesh(np.array(jax.devices()).reshape(p), ("data",))
+    B, S, D = 1, 32768, 512
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.uniform(0.9, 1.0, (B, S, D)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((B, S, D)), jnp.float32)
+
+    ref, _ = ssm_scan_chunked(a, b, jnp.zeros((B, D)))
+
+    for alg in ("123", "1doubling", "two_op"):
+        with collectives.collect_stats() as stats:
+            with jax.set_mesh(mesh):
+                f = jax.jit(lambda x, y, alg=alg: cp_ssm_scan(
+                    x, y, mesh, algorithm=alg))
+                out = f(a, b)
+                jax.block_until_ready(out)
+                t0 = time.perf_counter()
+                jax.block_until_ready(f(a, b))
+                dt = time.perf_counter() - t0
+        err = float(jnp.max(jnp.abs(out - ref)))
+        print(f"{alg:>10s}: {stats.rounds} carry rounds, "
+              f"{stats.op_applications} ⊕ compositions/device, "
+              f"max err {err:.1e}, wall {dt*1e3:.1f} ms")
+
+    print("\n(sequence length 32k sharded 8 ways; carry-in state per "
+          "device reconstructed exactly — errs are f32 noise)")
+
+
+if __name__ == "__main__":
+    main()

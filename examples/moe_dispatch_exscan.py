@@ -1,0 +1,55 @@
+"""MoE dispatch with exscan-driven global capacity accounting.
+
+Shows the paper's collective doing real work inside a model: a qwen-MoE
+forward on a 2x4 (data x model) mesh, comparing all exscan algorithms —
+the outputs are identical (same deterministic drop policy), the
+communication schedules differ per Theorem 1.
+
+    python examples/moe_dispatch_exscan.py
+"""
+
+import os
+
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=8")
+
+import sys  # noqa: E402
+
+sys.path.insert(0, os.path.join(os.path.dirname(
+    os.path.dirname(os.path.abspath(__file__))), "src"))
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+from jax.sharding import Mesh  # noqa: E402
+
+from repro import configs  # noqa: E402
+from repro.models.model import Model  # noqa: E402
+
+
+def main():
+    mesh = Mesh(np.array(jax.devices()).reshape(2, 4), ("data", "model"))
+    rng = np.random.default_rng(0)
+    tokens = jnp.asarray(rng.integers(0, 256, (8, 64)), jnp.int32)
+
+    outs = {}
+    for alg in ("123", "1doubling", "two_op", "native"):
+        cfg = configs.get_smoke("qwen2_moe_a2_7b", exscan_algorithm=alg)
+        model = Model(cfg, mesh)
+        params = model.init_params(jax.random.PRNGKey(0))
+        with jax.set_mesh(mesh):
+            logits, aux = jax.jit(model.forward)(params, tokens)
+        outs[alg] = np.asarray(logits)
+        print(f"{alg:>10s}: logits[0,0,:3]={outs[alg][0,0,:3]} "
+              f"load_balance={float(aux[0]):.4f} "
+              f"dropped={float(aux[1]):.4%}")
+
+    base = outs["123"]
+    for alg, o in outs.items():
+        np.testing.assert_allclose(o, base, rtol=1e-4, atol=1e-4)
+    print("\nall algorithms produce identical MoE outputs "
+          "(drop policy is algorithm-independent) ✓")
+
+
+if __name__ == "__main__":
+    main()

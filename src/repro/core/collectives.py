@@ -1,0 +1,401 @@
+"""SPMD exclusive/inclusive prefix-scan collectives for TPU meshes.
+
+This is the paper's contribution adapted to JAX: each simultaneous
+send-receive communication round becomes one ``lax.ppermute`` along a
+named mesh axis (every device sends and receives at most one message per
+round — the paper's one-ported model).  Edge ranks, which in the MPI
+formulation conditionally skip sends/receives, are handled uniformly in
+SPMD via the monoid identity and masked combines; the masks are exactly
+the paper's loop conditions (``0 < f``, ``t < p``).
+
+Algorithms (selectable, all returning the exclusive prefix under a
+:class:`repro.core.monoid.Monoid`; rank 0 receives the identity):
+
+  * ``"123"``        — the paper's new 123-doubling algorithm
+                       (Algorithm 1): q = ceil(log2(p-1)+log2(4/3))
+                       rounds, q-1 result-path ⊕.
+  * ``"1doubling"``  — shift + straight doubling: 1+ceil(log2(p-1))
+                       rounds, ceil(log2(p-1)) ⊕.
+  * ``"two_op"``     — two-⊕ doubling: ceil(log2 p) rounds,
+                       2*ceil(log2 p)-1 ⊕.
+  * ``"native"``     — all-gather + local fold (what a library would do
+                       without the paper; XLA-native collective).
+  * ``"ring"``       — p-1 neighbour rounds (bandwidth-optimal pipelined
+                       baseline for large m; see DESIGN.md).
+
+All functions must be called inside ``shard_map`` (or any context where
+``axis_name`` is bound).  Inputs may be arbitrary pytrees; the monoid
+operates on the whole tree.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import monoid as monoid_lib
+from repro.core import oracle
+
+
+# ---------------------------------------------------------------------------
+# Trace-time instrumentation: counts ppermute rounds and ⊕ applications so
+# tests and benchmarks can assert the paper's costs on the actual
+# implementation (not just the numpy oracle).
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    rounds: int = 0  # ppermute calls (communication rounds)
+    op_applications: int = 0  # ⊕ applications per device (SPMD)
+    allgathers: int = 0
+    bytes_per_round: list = dataclasses.field(default_factory=list)
+
+
+_tls = threading.local()
+
+
+@contextlib.contextmanager
+def collect_stats():
+    """Context manager capturing round/op counts of scans traced inside."""
+    stats = CollectiveStats()
+    prev = getattr(_tls, "stats", None)
+    _tls.stats = stats
+    try:
+        yield stats
+    finally:
+        _tls.stats = prev
+
+
+def _stats() -> CollectiveStats | None:
+    return getattr(_tls, "stats", None)
+
+
+def _nbytes(tree) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(tree))
+
+
+def _record_round(tree):
+    s = _stats()
+    if s is not None:
+        s.rounds += 1
+        s.bytes_per_round.append(_nbytes(tree))
+
+
+def _record_op():
+    s = _stats()
+    if s is not None:
+        s.op_applications += 1
+
+
+def _record_allgather():
+    s = _stats()
+    if s is not None:
+        s.allgathers += 1
+
+
+# ---------------------------------------------------------------------------
+# Helpers
+# ---------------------------------------------------------------------------
+
+
+def _axis_size(axis_name) -> int:
+    return lax.axis_size(axis_name)
+
+
+def _shift_up(tree, axis_name: str, skip: int, p: int):
+    """One communication round: rank r sends to r+skip (where r+skip < p).
+
+    Non-receiving ranks get zero-fill from ppermute; callers mask.
+    """
+    perm = [(r, r + skip) for r in range(p - skip)]
+    _record_round(tree)
+    return jax.tree.map(lambda x: lax.ppermute(x, axis_name, perm), tree)
+
+
+def _masked_combine(m: monoid_lib.Monoid, recv, w, mask):
+    """W <- recv ⊕ W where mask, else W (recv covers lower ranks)."""
+    combined = m.op(recv, w)
+    _record_op()
+    return jax.tree.map(
+        lambda c, x: jnp.where(mask, c, x), combined, w
+    )
+
+
+def _fixup_identity(m: monoid_lib.Monoid, recv, has_src):
+    """Replace zero-fill from ppermute with the monoid identity."""
+    ident = m.identity_like(recv)
+    return jax.tree.map(
+        lambda t, i: jnp.where(has_src, t, i), recv, ident
+    )
+
+
+# ---------------------------------------------------------------------------
+# The paper's algorithms
+# ---------------------------------------------------------------------------
+
+
+def exscan_123(x, axis_name: str, m: monoid_lib.Monoid):
+    """Algorithm 1 (123-doubling) as q ppermute rounds.
+
+    Skip schedule s_0=1, s_1=2, s_k=3*2^(k-2).  Masks mirror the paper's
+    conditions: round-0 receive iff r>=1, round-1 combine iff r>=2,
+    round-k combine iff r - s_k > 0 (rank complete once its window
+    bottoms out at 0 — the paper's ``while 0 < f``).
+    """
+    p = _axis_size(axis_name)
+    r = lax.axis_index(axis_name)
+    if p == 1:
+        return m.identity_like(x)
+
+    # Round 0 (skip 1): W = V_{r-1}; rank 0 holds the identity.
+    recv = _shift_up(x, axis_name, 1, p)
+    w = _fixup_identity(m, recv, r >= 1)
+    if p == 2:
+        return w
+
+    # Round 1 (skip 2): send W ⊕ V (rank 0's W is the identity, so it
+    # sends plain V exactly as in Algorithm 1); combine T ⊕ W iff r >= 2.
+    prep = m.op(w, x)
+    _record_op()
+    recv = _shift_up(prep, axis_name, 2, p)
+    w = _masked_combine(m, _fixup_identity(m, recv, r >= 2), w, r >= 2)
+
+    # Rounds k >= 2 (skip 3*2^(k-2)): plain doubling on W.
+    k = 2
+    while True:
+        s = 3 * (1 << (k - 2))
+        if s >= p - 1:
+            break
+        recv = _shift_up(w, axis_name, s, p)
+        w = _masked_combine(m, _fixup_identity(m, recv, r > s), w, r > s)
+        k += 1
+    return w
+
+
+def exscan_1doubling(x, axis_name: str, m: monoid_lib.Monoid):
+    """Shift + straight doubling: 1 + ceil(log2(p-1)) rounds."""
+    p = _axis_size(axis_name)
+    r = lax.axis_index(axis_name)
+    if p == 1:
+        return m.identity_like(x)
+
+    recv = _shift_up(x, axis_name, 1, p)
+    w = _fixup_identity(m, recv, r >= 1)
+
+    k = 1
+    while True:
+        s = 1 << (k - 1)
+        if s >= p - 1:
+            break
+        recv = _shift_up(w, axis_name, s, p)
+        w = _masked_combine(m, _fixup_identity(m, recv, r > s), w, r > s)
+        k += 1
+    return w
+
+
+def exscan_two_op(x, axis_name: str, m: monoid_lib.Monoid):
+    """Two-⊕ doubling: ceil(log2 p) rounds, two ⊕ per round after the first."""
+    p = _axis_size(axis_name)
+    r = lax.axis_index(axis_name)
+    if p == 1:
+        return m.identity_like(x)
+
+    recv = _shift_up(x, axis_name, 1, p)
+    w = _fixup_identity(m, recv, r >= 1)
+
+    k = 1
+    while (1 << k) < p:
+        s = 1 << k
+        prep = m.op(w, x)  # W ⊕ V  (rank 0: identity ⊕ V = V)
+        _record_op()
+        recv = _shift_up(prep, axis_name, s, p)
+        w = _masked_combine(m, _fixup_identity(m, recv, r >= s), w, r >= s)
+        k += 1
+    return w
+
+
+def exscan_native(x, axis_name: str, m: monoid_lib.Monoid):
+    """Baseline: all-gather everyone's V, fold locally below own rank.
+
+    One all-gather "round" but p·m bytes on the wire and p-1 local ⊕ —
+    the standard library fallback the paper improves upon for small m.
+    """
+    p = _axis_size(axis_name)
+    r = lax.axis_index(axis_name)
+    if p == 1:
+        return m.identity_like(x)
+    _record_allgather()
+    gathered = jax.tree.map(
+        lambda t: lax.all_gather(t, axis_name, axis=0), x
+    )
+    ident = m.identity_like(x)
+
+    def body(i, acc):
+        vi = jax.tree.map(lambda g: g[i], gathered)
+        take = i < r
+        combined = m.op(acc, vi)
+        return jax.tree.map(
+            lambda c, a: jnp.where(take, c, a), combined, acc
+        )
+
+    return lax.fori_loop(0, p - 1, body, ident)
+
+
+def exscan_ring(x, axis_name: str, m: monoid_lib.Monoid):
+    """p-1 neighbour rounds; latency-poor but each round is 1 hop.
+
+    Included as the pipelined/fixed-degree comparison point the paper
+    cites for large m.
+    """
+    p = _axis_size(axis_name)
+    r = lax.axis_index(axis_name)
+    if p == 1:
+        return m.identity_like(x)
+    recv = _shift_up(x, axis_name, 1, p)
+    w = _fixup_identity(m, recv, r >= 1)
+    acc = w  # running exclusive prefix
+    carry = w  # value to forward (V_{r-1} partial chain)
+    for step in range(1, p - 1):
+        # Forward the chain: each round, rank r receives V_{r-step-1}'s
+        # running partial and folds it in if still needed.
+        recv = _shift_up(carry, axis_name, 1, p)
+        recv = _fixup_identity(m, recv, r >= step + 1)
+        acc = _masked_combine(m, recv, acc, r >= step + 1)
+        carry = recv
+    return acc
+
+
+_ALGORITHMS = {
+    "123": exscan_123,
+    "1doubling": exscan_1doubling,
+    "two_op": exscan_two_op,
+    "native": exscan_native,
+    "ring": exscan_ring,
+}
+
+ALGORITHMS = tuple(_ALGORITHMS)
+
+
+def exscan(x, axis_name, m="add", algorithm: str = "123"):
+    """Exclusive prefix scan along one or more named mesh axes.
+
+    Args:
+      x: pytree of arrays (the per-rank input vector V_r).
+      axis_name: a mesh axis name, or a tuple of axis names ordered
+        major→minor (e.g. ``("pod", "data")``); ranks are taken in
+        row-major order over the tuple, matching
+        ``lax.axis_index(axes)`` ordering.
+      m: a Monoid or registry name.
+      algorithm: one of ``ALGORITHMS``.
+
+    Returns:
+      The exclusive prefix ⊕_{i<r} V_i; rank 0 gets the identity.
+    """
+    m = monoid_lib.get(m)
+    if algorithm not in _ALGORITHMS:
+        raise ValueError(
+            f"unknown algorithm {algorithm!r}; known: {sorted(_ALGORITHMS)}"
+        )
+    fn = _ALGORITHMS[algorithm]
+    if isinstance(axis_name, (tuple, list)):
+        axes = tuple(axis_name)
+        if len(axes) == 1:
+            return fn(x, axes[0], m)
+        # Two-level composition: exscan within the minor axis, plus the
+        # exclusive prefix over major-axis *totals* (see DESIGN.md §5).
+        minor = axes[-1]
+        inner = fn(x, minor, m)
+        total = allreduce(x, minor, m)  # ⊕ of the whole minor group
+        outer = exscan(total, axes[:-1], m, algorithm)
+        combined = m.op(outer, inner)
+        _record_op()
+        return combined
+    return fn(x, axis_name, m)
+
+
+def inclusive_scan(x, axis_name: str, m="add"):
+    """Hillis-Steele inclusive scan: ceil(log2 p) rounds, one ⊕ each."""
+    m = monoid_lib.get(m)
+    p = _axis_size(axis_name)
+    r = lax.axis_index(axis_name)
+    w = x
+    k = 0
+    while (1 << k) < p:
+        s = 1 << k
+        recv = _shift_up(w, axis_name, s, p)
+        w = _masked_combine(m, _fixup_identity(m, recv, r >= s), w, r >= s)
+        k += 1
+    return w
+
+
+def allreduce(x, axis_name: str, m="add"):
+    """Recursive-doubling (butterfly) all-reduce under an arbitrary monoid.
+
+    ceil(log2 p) rounds.  For non-commutative monoids the butterfly
+    exchange pattern preserves rank order within each combine (lower
+    block always on the left).
+    """
+    m = monoid_lib.get(m)
+    p = _axis_size(axis_name)
+    if p == 1:
+        return x
+    r = lax.axis_index(axis_name)
+    w = x
+    # For non-power-of-two p fall back to inclusive scan + broadcast of the
+    # last rank's value (2*ceil(log2 p) rounds worst case, still log).
+    if p & (p - 1):
+        incl = inclusive_scan(x, axis_name, m)
+        # broadcast rank p-1's inclusive value to everyone
+        _record_allgather()
+        return jax.tree.map(
+            lambda t: lax.all_gather(t, axis_name, axis=0)[p - 1], incl
+        )
+    k = 0
+    while (1 << k) < p:
+        s = 1 << k
+        partner = r ^ s
+        perm = [(i, i ^ s) for i in range(p)]
+        _record_round(w)
+        recv = jax.tree.map(lambda t: lax.ppermute(t, axis_name, perm), w)
+        low_side = (r & s) != 0  # partner is the lower block
+        combined_lo = m.op(recv, w)  # partner low, self high
+        combined_hi = m.op(w, recv)  # self low, partner high
+        _record_op()
+        _record_op()
+        w = jax.tree.map(
+            lambda lo, hi: jnp.where(low_side, lo, hi),
+            combined_lo,
+            combined_hi,
+        )
+        k += 1
+    return w
+
+
+# ---------------------------------------------------------------------------
+# Theory helpers re-exported for benchmarks
+# ---------------------------------------------------------------------------
+
+q_123 = oracle.q_123
+rounds_1doubling = oracle.rounds_1doubling
+rounds_two_op = oracle.rounds_two_op
+
+
+def expected_rounds(algorithm: str, p: int) -> int:
+    if algorithm == "123":
+        return oracle.q_123(p)
+    if algorithm == "1doubling":
+        return oracle.rounds_1doubling(p)
+    if algorithm == "two_op":
+        return oracle.rounds_two_op(p)
+    if algorithm == "ring":
+        return max(0, p - 1)
+    if algorithm == "native":
+        return 1  # one all-gather (but p·m bytes)
+    raise ValueError(algorithm)

@@ -1,0 +1,200 @@
+"""Monoid abstraction for scan/reduce collectives.
+
+The paper's algorithms require only associativity of ``op`` (NOT
+commutativity).  The SPMD adaptation additionally requires an identity
+element so that edge ranks (which in the MPI formulation conditionally
+skip sends/receives) can be expressed uniformly: a rank with no source
+"receives" the identity, making the combine a no-op.
+
+A monoid here operates on *pytrees* so that structured states (e.g. the
+(decay, state) pairs of an SSM chunk scan, or (A, b) affine maps) can be
+scanned with the same collectives as plain vectors.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Monoid:
+    """An associative binary operator with identity, over pytrees.
+
+    Attributes:
+      name: registry key.
+      op: ``op(lo, hi) -> combined`` where ``lo`` covers *lower* ranks.
+        Must be associative.  Order is preserved by all collectives, so
+        non-commutative monoids are supported.
+      identity_like: maps a pytree of arrays to the identity element of
+        the same structure/shape/dtype.
+      commutative: informational only (enables extra test oracles).
+    """
+
+    name: str
+    op: Callable[[Any, Any], Any]
+    identity_like: Callable[[Any], Any]
+    commutative: bool = False
+
+    def fold(self, items):
+        """Left fold; returns identity_like(items[0]) for empty input."""
+        items = list(items)
+        if not items:
+            raise ValueError("fold of empty sequence needs a shape witness")
+        acc = items[0]
+        for x in items[1:]:
+            acc = self.op(acc, x)
+        return acc
+
+
+def _zeros_like(x):
+    return jax.tree.map(jnp.zeros_like, x)
+
+
+def _ones_like(x):
+    return jax.tree.map(jnp.ones_like, x)
+
+
+def _full_like(value):
+    def f(x):
+        return jax.tree.map(lambda t: jnp.full_like(t, value), x)
+
+    return f
+
+
+def _min_identity(x):
+    def one(t):
+        if jnp.issubdtype(t.dtype, jnp.floating):
+            return jnp.full_like(t, jnp.inf)
+        return jnp.full_like(t, jnp.iinfo(t.dtype).max)
+
+    return jax.tree.map(one, x)
+
+
+def _max_identity(x):
+    def one(t):
+        if jnp.issubdtype(t.dtype, jnp.floating):
+            return jnp.full_like(t, -jnp.inf)
+        return jnp.full_like(t, jnp.iinfo(t.dtype).min)
+
+    return jax.tree.map(one, x)
+
+
+ADD = Monoid(
+    name="add",
+    op=lambda lo, hi: jax.tree.map(jnp.add, lo, hi),
+    identity_like=_zeros_like,
+    commutative=True,
+)
+
+MUL = Monoid(
+    name="mul",
+    op=lambda lo, hi: jax.tree.map(jnp.multiply, lo, hi),
+    identity_like=_ones_like,
+    commutative=True,
+)
+
+MAX = Monoid(
+    name="max",
+    op=lambda lo, hi: jax.tree.map(jnp.maximum, lo, hi),
+    identity_like=_max_identity,
+    commutative=True,
+)
+
+MIN = Monoid(
+    name="min",
+    op=lambda lo, hi: jax.tree.map(jnp.minimum, lo, hi),
+    identity_like=_min_identity,
+    commutative=True,
+)
+
+XOR = Monoid(
+    name="xor",
+    op=lambda lo, hi: jax.tree.map(jnp.bitwise_xor, lo, hi),
+    identity_like=_zeros_like,
+    commutative=True,
+)
+
+
+def _affine_op(lo, hi):
+    """Composition of elementwise affine maps x -> a*x + b.
+
+    ``lo`` is applied first (covers lower ranks), then ``hi``:
+      (hi ∘ lo)(x) = a_hi * (a_lo * x + b_lo) + b_hi
+                   = (a_hi*a_lo) * x + (a_hi*b_lo + b_hi)
+
+    This is the state-composition monoid of diagonal SSM / linear-RNN
+    chunk scans (RWKV, Mamba-style): associative, NON-commutative, and
+    "expensive" relative to plain add — exactly the operator class the
+    paper's q-1 ⊕-application bound targets.
+    """
+    a_lo, b_lo = lo
+    a_hi, b_hi = hi
+    return (a_hi * a_lo, a_hi * b_lo + b_hi)
+
+
+def _affine_identity(x):
+    a, b = x
+    return (jnp.ones_like(a), jnp.zeros_like(b))
+
+
+AFFINE = Monoid(
+    name="affine",
+    op=_affine_op,
+    identity_like=_affine_identity,
+    commutative=False,
+)
+
+
+def _matmul_op(lo, hi):
+    """Matrix-product monoid (batched over leading dims); non-commutative."""
+    return jax.tree.map(lambda l, h: jnp.matmul(h, l), lo, hi)
+
+
+def _matmul_identity(x):
+    def one(t):
+        n = t.shape[-1]
+        eye = jnp.eye(n, dtype=t.dtype)
+        return jnp.broadcast_to(eye, t.shape)
+
+    return jax.tree.map(one, x)
+
+
+MATMUL = Monoid(
+    name="matmul",
+    op=_matmul_op,
+    identity_like=_matmul_identity,
+    commutative=False,
+)
+
+
+REGISTRY: dict[str, Monoid] = {
+    m.name: m for m in (ADD, MUL, MAX, MIN, XOR, AFFINE, MATMUL)
+}
+
+
+def get(name_or_monoid) -> Monoid:
+    if isinstance(name_or_monoid, Monoid):
+        return name_or_monoid
+    try:
+        return REGISTRY[name_or_monoid]
+    except KeyError:
+        raise KeyError(
+            f"unknown monoid {name_or_monoid!r}; known: {sorted(REGISTRY)}"
+        ) from None
+
+
+# Numpy twins for the message-schedule oracle (no jax involvement).
+NUMPY_OPS: dict[str, Callable] = {
+    "add": lambda lo, hi: jax.tree.map(np.add, lo, hi),
+    "mul": lambda lo, hi: jax.tree.map(np.multiply, lo, hi),
+    "max": lambda lo, hi: jax.tree.map(np.maximum, lo, hi),
+    "min": lambda lo, hi: jax.tree.map(np.minimum, lo, hi),
+    "xor": lambda lo, hi: jax.tree.map(np.bitwise_xor, lo, hi),
+    "affine": lambda lo, hi: (hi[0] * lo[0], hi[0] * lo[1] + hi[1]),
+    "matmul": lambda lo, hi: jax.tree.map(lambda l, h: h @ l, lo, hi),
+}

@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+Each kernel module pairs with a pure-jnp oracle in ref.py; ops.py holds
+the public, shape-flexible jit'd wrappers (interpret=True off-TPU).
+"""
+
+from repro.kernels import ops, ref

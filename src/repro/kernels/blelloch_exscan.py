@@ -1,0 +1,66 @@
+"""Block-tiled exclusive prefix-sum Pallas TPU kernel.
+
+The on-chip counterpart of the paper's collective: inside one device,
+the "m element" local vectors are scanned along a (possibly long) row
+axis.  TPU adaptation (see DESIGN.md §2): instead of the PRAM Blelloch
+up/down-sweep tree (a GPU-shared-memory idiom), we exploit the fact that
+a Pallas TPU grid executes *sequentially* on a core, so a single VMEM
+scratch register carries the running block total — one pass over HBM,
+work-efficient (each element touched once), with the intra-block scan
+vectorized on the VPU (8x128 lanes) via ``jnp.cumsum``.
+
+Grid: one program per row-block.  BlockSpec tiles (block_rows, width)
+into VMEM; width is lane-padded to a multiple of 128 by the ops.py
+wrapper, block_rows chosen so the tile fits comfortably in VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _exscan_kernel(x_ref, o_ref, carry_ref):
+    """One grid step: o = carry + exclusive_cumsum(x); carry += sum(x)."""
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        carry_ref[...] = jnp.zeros_like(carry_ref)
+
+    x = x_ref[...]
+    incl = jnp.cumsum(x, axis=0)
+    carry = carry_ref[...]
+    o_ref[...] = carry + incl - x  # exclusive within block, shifted by carry
+    carry_ref[...] = carry + incl[-1:, :]
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def blelloch_exscan(
+    x: jax.Array, *, block_rows: int = 256, interpret: bool = False
+) -> jax.Array:
+    """Exclusive prefix sum over axis 0 of a 2D array.
+
+    Args:
+      x: (n, d) array; n must be a multiple of ``block_rows`` and d a
+        multiple of 128 (the ops.py wrapper pads arbitrary shapes).
+      block_rows: rows per VMEM tile.
+    """
+    n, d = x.shape
+    assert n % block_rows == 0, (n, block_rows)
+    grid = (n // block_rows,)
+    return pl.pallas_call(
+        _exscan_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, d), x.dtype),
+        scratch_shapes=[pltpu.VMEM((1, d), x.dtype)],
+        interpret=interpret,
+    )(x)

@@ -1,0 +1,88 @@
+"""Fused MoE routing-offset Pallas TPU kernel.
+
+Given per-(token, slot) expert assignments, computes each entry's write
+position inside its expert's buffer (the exclusive count of earlier
+same-expert entries) plus per-expert totals — the quantities whose
+*cross-device* prefix is then taken with the paper's 123-doubling exscan
+to build all-to-all dispatch offsets (models/moe.py).
+
+TPU adaptation: a histogram-scan.  Sequential grid over token blocks,
+running per-expert counters in VMEM scratch; within a block the one-hot
+expansion (block_tokens*K, E) is scanned with a vectorized cumsum on the
+VPU.  One pass, no atomics (the GPU idiom) needed — grid order gives
+determinism for free.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _routing_kernel(assign_ref, pos_ref, counts_ref, carry_ref, *, num_experts):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        carry_ref[...] = jnp.zeros_like(carry_ref)
+
+    assign = assign_ref[...]  # (bt, K) int32
+    bt, k = assign.shape
+    flat = assign.reshape(bt * k)
+    iota = jax.lax.broadcasted_iota(jnp.int32, (bt * k, num_experts), 1)
+    onehot = (flat[:, None] == iota).astype(jnp.int32)  # (bt*K, E)
+    incl = jnp.cumsum(onehot, axis=0)
+    excl = incl - onehot
+    carry = carry_ref[...]  # (1, E)
+    pos_flat = jnp.sum((excl + carry) * onehot, axis=1)  # gather own column
+    pos_ref[...] = pos_flat.reshape(bt, k)
+    new_counts = carry + incl[-1:, :]
+    carry_ref[...] = new_counts
+
+    @pl.when(i == pl.num_programs(0) - 1)
+    def _final():
+        counts_ref[...] = new_counts
+
+
+@functools.partial(
+    jax.jit, static_argnames=("num_experts", "block_tokens", "interpret")
+)
+def moe_routing(
+    assignment: jax.Array,
+    *,
+    num_experts: int,
+    block_tokens: int = 256,
+    interpret: bool = False,
+):
+    """Positions within expert buffers + per-expert counts.
+
+    Args:
+      assignment: (T, K) int32 expert ids, T % block_tokens == 0.
+
+    Returns:
+      positions: (T, K) int32; counts: (1, num_experts) int32.
+    """
+    T, K = assignment.shape
+    assert T % block_tokens == 0, (T, block_tokens)
+    grid = (T // block_tokens,)
+    kernel = functools.partial(_routing_kernel, num_experts=num_experts)
+    positions, counts = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_tokens, K), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((block_tokens, K), lambda i: (i, 0)),
+            pl.BlockSpec((1, num_experts), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((T, K), jnp.int32),
+            jax.ShapeDtypeStruct((1, num_experts), jnp.int32),
+        ],
+        scratch_shapes=[pltpu.VMEM((1, num_experts), jnp.int32)],
+        interpret=interpret,
+    )(assignment)
+    return positions, counts

@@ -1,0 +1,59 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function is the semantic specification its kernel is tested
+against (``assert_allclose`` over shape/dtype sweeps, interpret mode).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def exscan_ref(x: jax.Array, axis: int = 0) -> jax.Array:
+    """Exclusive prefix sum along ``axis`` (row 0 gets zeros)."""
+    incl = jnp.cumsum(x, axis=axis)
+    excl = incl - x
+    return excl
+
+
+def ssm_scan_ref(a: jax.Array, b: jax.Array, h0: jax.Array | None = None):
+    """Diagonal linear recurrence h_t = a_t * h_{t-1} + b_t.
+
+    a, b: (T, D).  h0: (D,) initial state (zeros if None).
+    Returns (h, h_final) where h[t] is the state AFTER absorbing step t.
+    """
+    T, D = a.shape
+    if h0 is None:
+        h0 = jnp.zeros((D,), b.dtype)
+
+    def step(h, ab):
+        at, bt = ab
+        h = at * h + bt
+        return h, h
+
+    h_final, hs = lax.scan(step, h0.astype(b.dtype), (a, b))
+    return hs, h_final
+
+
+def moe_routing_ref(assignment: jax.Array, num_experts: int):
+    """Per-(token, slot) position within its expert + per-expert counts.
+
+    assignment: (T, K) int32 expert ids in [0, num_experts).
+    Position ordering is row-major over (token, slot): slot j of token t
+    precedes slot j' of token t' iff t*K + j < t'*K + j'.
+
+    Returns:
+      positions: (T, K) int32 — index of this entry within its expert's
+        buffer (exclusive count of earlier same-expert entries).
+      counts: (num_experts,) int32 — total entries per expert.
+    """
+    T, K = assignment.shape
+    flat = assignment.reshape(-1)  # (T*K,) in arrival order
+    onehot = jax.nn.one_hot(flat, num_experts, dtype=jnp.int32)  # (TK, E)
+    incl = jnp.cumsum(onehot, axis=0)
+    excl = incl - onehot
+    positions = jnp.take_along_axis(excl, flat[:, None], axis=1)[:, 0]
+    counts = onehot.sum(axis=0)
+    return positions.reshape(T, K), counts

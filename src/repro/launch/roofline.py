@@ -1,0 +1,161 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Three terms per (arch × shape × mesh), in seconds (see EXPERIMENTS.md
+§Roofline):
+
+    compute    = HLO_FLOPs_per_device / peak_FLOPs
+    memory     = HLO_bytes_per_device / HBM_bw
+    collective = Σ_ops bytes_on_wire(op) / link_bw
+
+HLO_FLOPs / HLO_bytes come from ``compiled.cost_analysis()`` (the
+partitioned per-device module).  Collective bytes are NOT in
+cost_analysis: we parse the optimized HLO text and apply standard
+ring-algorithm wire-byte accounting per op with its replica-group size.
+
+Hardware model (TPU v5e per chip): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI (per direction), 3D-torus with 1-hop neighbours.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # bytes/s
+LINK_BW = 50e9  # bytes/s per ICI link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """'bf16[8,128]' -> bytes; tuples handled by caller via findall."""
+    m = _SHAPE_RE.match(shape_str)
+    if not m:
+        return 0
+    dt, dims = m.groups()
+    if dt not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dt]
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    op_counts: dict
+    op_bytes: dict  # wire bytes per op kind
+
+    @property
+    def total_bytes(self) -> float:
+        return sum(self.op_bytes.values())
+
+    @property
+    def total_count(self) -> int:
+        return sum(self.op_counts.values())
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    counts: dict[str, int] = {}
+    bytes_: dict[str, float] = {}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = re.match(r"(?:ROOT )?%?[\w.\-]+ = (\(?[^)]*?\)?) "
+                     r"(all-reduce|all-gather|reduce-scatter|all-to-all|"
+                     r"collective-permute)(-start|-done)?\(", line)
+        if not m:
+            continue
+        out_shapes, op, phase = m.groups()
+        if phase == "-done":
+            continue  # counted at -start
+        out_bytes = sum(_shape_bytes(s)
+                        for s in re.findall(r"\w+\[[\d,]*\]", out_shapes))
+        # group size: explicit lists or iota [n,g] form
+        g = 1
+        gm = _GROUPS_RE.search(line)
+        if gm:
+            g = len(gm.group(1).split(","))
+        else:
+            gi = _GROUPS_IOTA_RE.search(line)
+            if gi:
+                g = int(gi.group(2))
+        if g <= 1 and op != "collective-permute":
+            continue  # degenerate
+        frac = (g - 1) / g if g > 1 else 1.0
+        if op == "all-reduce":
+            wire = 2.0 * out_bytes * frac
+        elif op == "all-gather":
+            wire = out_bytes * frac
+        elif op == "reduce-scatter":
+            wire = out_bytes * g * frac  # out is the scattered piece
+        elif op == "all-to-all":
+            wire = out_bytes * frac
+        else:  # collective-permute: one send per device
+            wire = out_bytes
+        counts[op] = counts.get(op, 0) + 1
+        bytes_[op] = bytes_.get(op, 0.0) + wire
+    return CollectiveStats(counts, bytes_)
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float  # per device
+    bytes_hbm: float  # per device
+    collective: CollectiveStats
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    model_flops: float  # 6·N_active·tokens (whole step, all devices)
+    n_devices: int
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_fraction(self) -> float:
+        total = self.flops * self.n_devices
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def mfu_bound(self) -> float:
+        """MFU if the step ran exactly at the dominant roofline term."""
+        denom = self.bound_s * self.n_devices * PEAK_FLOPS
+        return self.model_flops / denom if denom else 0.0
+
+
+def analyze(compiled, *, model_flops: float, n_devices: int) -> Roofline:
+    cost = compiled.cost_analysis()
+    flops = float(cost.get("flops", 0.0))
+    bytes_hbm = float(cost.get("bytes accessed", 0.0))
+    text = compiled.as_text()
+    coll = parse_collectives(text)
+    return Roofline(
+        flops=flops,
+        bytes_hbm=bytes_hbm,
+        collective=coll,
+        compute_s=flops / PEAK_FLOPS,
+        memory_s=bytes_hbm / HBM_BW,
+        collective_s=coll.total_bytes / LINK_BW,
+        model_flops=model_flops,
+        n_devices=n_devices,
+    )

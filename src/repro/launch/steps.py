@@ -1,0 +1,241 @@
+"""Step functions + abstract input specs for every (arch × shape) cell.
+
+``input_specs`` returns ShapeDtypeStruct stand-ins (weak-type-correct,
+shardable, zero allocation) for every input of the cell's step function;
+``make_step``/``shardings`` build the jit-able callable and its
+in/out shardings.  The dry-run lowers ``jax.jit(step, in_shardings=...)
+.lower(*specs).compile()`` — nothing here ever touches real data.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.launch import mesh as mesh_lib
+from repro.models import params as PD
+from repro.models.config import ModelConfig
+from repro.models.model import Model
+from repro.optim import adamw_init, adamw_update, clip_by_global_norm, \
+    cosine_lr
+from repro.sharding import rules as rules_lib
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str  # "train" | "prefill" | "decode"
+    seq: int
+    batch: int
+    long_context: bool = False
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524288, 1,
+                           long_context=True),
+}
+
+SUBQUADRATIC_FAMILIES = ("ssm", "hybrid")
+
+
+def applicable(cfg: ModelConfig, shape: ShapeSpec) -> tuple[bool, str]:
+    """Whether this (arch, shape) cell runs; else the recorded reason."""
+    if cfg.encoder_only and shape.kind == "decode":
+        return False, "encoder-only arch has no decode step"
+    if shape.long_context and cfg.family not in SUBQUADRATIC_FAMILIES:
+        return False, ("pure full-attention arch: 500k context needs "
+                       "sub-quadratic attention (DESIGN.md shape skips)")
+    return True, ""
+
+
+def kv_dup(cfg: ModelConfig, mesh) -> int:
+    """KV-head duplication factor for the decode cache.
+
+    We duplicate kv heads to the smallest count that (a) the TP degree
+    divides (so the cache heads dim shards) and (b) divides n_heads (so
+    GQA grouping stays exact).  If no such count exists (e.g. 24 q
+    heads, kv=2, tp=16) we return 1 and the cache falls back to
+    sequence-over-model sharding — see cache_logical_axes."""
+    tp = mesh.shape["model"]
+    kv, h = cfg.n_kv_heads, cfg.n_heads
+    for dup in range(1, h // kv + 1):
+        kvd = kv * dup
+        if kvd % tp == 0 and h % kvd == 0:
+            return dup
+    return 1
+
+
+def kv_shardable(cfg: ModelConfig, mesh) -> bool:
+    tp = mesh.shape["model"]
+    kvd = cfg.n_kv_heads * kv_dup(cfg, mesh)
+    return kvd % tp == 0
+
+
+# --------------------------- abstract inputs ---------------------------
+
+
+def _batch_specs(cfg: ModelConfig, B: int, S: int):
+    """S is the TOTAL backbone sequence; vlm frontends consume the first
+    n_prefix positions with stub patch embeddings (DESIGN.md §6)."""
+    dt = jnp.dtype(cfg.dtype)
+    out = {}
+    if cfg.frontend == "audio":
+        out["embeds"] = jax.ShapeDtypeStruct((B, S, cfg.d_model), dt)
+        out["labels"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        return out
+    s_tok = S - (cfg.n_prefix if cfg.frontend == "vision" else 0)
+    out["tokens"] = jax.ShapeDtypeStruct((B, s_tok), jnp.int32)
+    out["labels"] = jax.ShapeDtypeStruct((B, s_tok), jnp.int32)
+    if cfg.frontend == "vision":
+        out["prefix"] = jax.ShapeDtypeStruct((B, cfg.n_prefix, cfg.d_model),
+                                             dt)
+    return out
+
+
+def _batch_shardings(cfg: ModelConfig, batch_specs, mesh, rules, B):
+    bt = mesh_lib.batch_axes(mesh)
+    b_entry = bt if (bt and B % mesh_lib.data_degree(mesh) == 0) else None
+
+    def shard(s):
+        spec = P(b_entry, *([None] * (len(s.shape) - 1)))
+        return NamedSharding(mesh, spec)
+
+    return jax.tree.map(shard, batch_specs)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec, mesh):
+    """(abstract_args, arg_shardings, donate_argnums) for the cell."""
+    model = Model(cfg, mesh)
+    rules = rules_lib.rules_for(cfg)
+    params = model.abstract_params()
+    p_shard = model.param_shardings(rules)
+
+    if shape.kind == "train":
+        opt = jax.eval_shape(adamw_init, params)
+        opt_shard = type(opt)(
+            step=NamedSharding(mesh, P()),
+            mu=jax.tree.map(
+                lambda s, sh: sh, opt.mu, p_shard),
+            nu=jax.tree.map(lambda s, sh: sh, opt.nu, p_shard),
+        )
+        batch = _batch_specs(cfg, shape.batch, shape.seq)
+        b_shard = _batch_shardings(cfg, batch, mesh, rules, shape.batch)
+        step_ct = jax.ShapeDtypeStruct((), jnp.int32)
+        args = (params, opt, batch, step_ct)
+        shardings = (p_shard, opt_shard, b_shard, NamedSharding(mesh, P()))
+        return args, shardings, (0, 1)
+
+    # serving cells
+    if cfg.encoder_only:  # prefill == one full encode pass, no cache
+        bt = mesh_lib.batch_axes(mesh)
+        b_entry = bt if (bt and shape.batch %
+                         mesh_lib.data_degree(mesh) == 0) else None
+        dt = jnp.dtype(cfg.dtype)
+        embeds = jax.ShapeDtypeStruct(
+            (shape.batch, shape.seq, cfg.d_model), dt)
+        sh = NamedSharding(mesh, P(b_entry, None, None))
+        return (params, embeds), (p_shard, sh), ()
+
+    dup = kv_dup(cfg, mesh)
+    seq_sharded = shape.long_context
+    if shape.kind == "prefill":
+        S_in, cache_len_known = shape.seq, 0
+        cache_max = shape.seq
+    else:
+        S_in, cache_len_known = 1, None
+        cache_max = shape.seq
+    cache = model.abstract_cache(shape.batch, cache_max, dup)
+    cache_axes = model.cache_logical_axes(
+        seq_sharded, kv_shardable(cfg, mesh))
+    cache_shard = jax.tree.map(
+        lambda log, s: rules.shard(log, mesh, s.shape),
+        cache_axes, cache,
+        is_leaf=lambda x: isinstance(x, tuple)
+        and all(isinstance(e, (str, type(None))) for e in x),
+    )
+    bt = mesh_lib.batch_axes(mesh)
+    b_ok = shape.batch % mesh_lib.data_degree(mesh) == 0
+    b_entry = bt if (bt and b_ok) else None
+    dt = jnp.dtype(cfg.dtype)
+    vlm_prefill = cfg.frontend == "vision" and shape.kind == "prefill"
+    s_tok = S_in - (cfg.n_prefix if vlm_prefill else 0)
+    tokens = jax.ShapeDtypeStruct((shape.batch, s_tok), jnp.int32)
+    tok_shard = NamedSharding(mesh, P(b_entry, None))
+    cache_len = jax.ShapeDtypeStruct((), jnp.int32)
+    args = [params, cache, tokens, cache_len]
+    shardings = [p_shard, cache_shard, tok_shard, NamedSharding(mesh, P())]
+    if vlm_prefill:
+        args.append(jax.ShapeDtypeStruct(
+            (shape.batch, cfg.n_prefix, cfg.d_model), dt))
+        shardings.append(NamedSharding(mesh, P(b_entry, None, None)))
+    return tuple(args), tuple(shardings), (1,)
+
+
+# --------------------------- step functions ---------------------------
+
+
+def make_train_step(cfg: ModelConfig, mesh, *, lr_peak: float = 3e-4,
+                    warmup: int = 100, total_steps: int = 10_000):
+    model = Model(cfg, mesh)
+
+    def train_step(params, opt_state, batch, step):
+        def loss_fn(p):
+            return model.loss(p, batch)
+
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params)
+        grads, gnorm = clip_by_global_norm(grads, 1.0)
+        lr = cosine_lr(step, peak=lr_peak, warmup=warmup, total=total_steps)
+        params, opt_state = adamw_update(params, grads, opt_state, lr=lr)
+        out_metrics = dict(metrics)
+        out_metrics.update(loss=loss, grad_norm=gnorm, lr=lr)
+        return params, opt_state, out_metrics
+
+    return train_step
+
+
+def make_serve_step(cfg: ModelConfig, mesh, shape: ShapeSpec):
+    model = Model(cfg, mesh)
+    last_only = shape.kind == "prefill"
+
+    if cfg.encoder_only:
+        def encode_step(params, embeds):
+            logits, _ = model.forward(params, None, embeds)
+            return logits
+
+        return encode_step
+
+    if cfg.frontend == "vision" and shape.kind == "prefill":
+        def serve_step(params, cache, tokens, cache_len, prefix):
+            return model.serve_step(params, cache, tokens, cache_len,
+                                    prefix_embeds=prefix,
+                                    last_only=last_only)
+    else:
+        def serve_step(params, cache, tokens, cache_len):
+            return model.serve_step(params, cache, tokens, cache_len,
+                                    last_only=last_only)
+
+    return serve_step
+
+
+def make_step(cfg: ModelConfig, mesh, shape: ShapeSpec):
+    if shape.kind == "train":
+        return make_train_step(cfg, mesh)
+    return make_serve_step(cfg, mesh, shape)
+
+
+def lower_cell(cfg: ModelConfig, shape: ShapeSpec, mesh):
+    """Lower (but don't compile) one cell. Returns the Lowered object."""
+    step = make_step(cfg, mesh, shape)
+    args, shardings, donate = input_specs(cfg, shape, mesh)
+    jitted = jax.jit(step, in_shardings=shardings, donate_argnums=donate)
+    with jax.set_mesh(mesh):
+        return jitted.lower(*args)

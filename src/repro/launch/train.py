@@ -1,0 +1,144 @@
+"""End-to-end training driver with checkpoint/restart fault tolerance.
+
+Usage (CPU example — the quickstart trains a ~100M model):
+    PYTHONPATH=src python -m repro.launch.train --arch llama3-8b --smoke \
+        --steps 200 --batch 8 --seq 256 --ckpt-dir /tmp/ckpt
+
+Production features exercised here end-to-end:
+  * deterministic resumable data pipeline (seeded by step),
+  * async sharded checkpointing with atomic commit,
+  * automatic resume from the latest committed checkpoint,
+  * straggler/step-time telemetry with EWMA watchdog,
+  * selectable exscan algorithm for the MoE dispatch collective.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.checkpoint.store import CheckpointStore
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.launch import mesh as mesh_lib
+from repro.launch.steps import make_train_step
+from repro.models.model import Model
+from repro.optim import adamw_init
+
+
+class StragglerWatchdog:
+    """EWMA step-time tracker; flags steps slower than ``k`` x EWMA.
+
+    On a real cluster the flag feeds the controller's drop-and-rebalance
+    policy (DESIGN.md §9); here it provides the telemetry + hook."""
+
+    def __init__(self, alpha: float = 0.1, k: float = 3.0):
+        self.alpha = alpha
+        self.k = k
+        self.ewma = None
+        self.flagged: list[int] = []
+
+    def observe(self, step: int, dt: float) -> bool:
+        if self.ewma is None:
+            self.ewma = dt
+            return False
+        slow = dt > self.k * self.ewma
+        if slow:
+            self.flagged.append(step)
+        self.ewma = (1 - self.alpha) * self.ewma + self.alpha * dt
+        return slow
+
+
+def train(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced same-family config")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--resume", default="auto", choices=["auto", "none"])
+    ap.add_argument("--data-mesh", type=int, default=1)
+    ap.add_argument("--model-mesh", type=int, default=1)
+    ap.add_argument("--exscan", default="123",
+                    choices=["123", "1doubling", "two_op", "native"])
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    get = configs.get_smoke if args.smoke else configs.get
+    cfg = get(args.arch, exscan_algorithm=args.exscan)
+    mesh = mesh_lib.make_host_mesh(args.data_mesh, args.model_mesh)
+    model = Model(cfg, mesh)
+
+    params = model.init_params(jax.random.PRNGKey(0))
+    opt = adamw_init(params)
+    start_step = 0
+
+    store = None
+    if args.ckpt_dir:
+        store = CheckpointStore(args.ckpt_dir)
+        if args.resume == "auto":
+            latest = store.latest_step()
+            if latest is not None:
+                state = store.restore(latest, {"params": params, "opt": opt})
+                params, opt = state["params"], state["opt"]
+                start_step = latest
+                print(f"[resume] restored step {latest}")
+
+    step_fn = jax.jit(make_train_step(
+        cfg, mesh, lr_peak=args.lr, warmup=max(1, args.steps // 20),
+        total_steps=args.steps), donate_argnums=(0, 1))
+
+    data = SyntheticLM(DataConfig(
+        vocab=cfg.vocab, seq_len=args.seq, global_batch=args.batch))
+    rng = np.random.default_rng(1234)
+    watchdog = StragglerWatchdog()
+    losses = []
+    with jax.set_mesh(mesh):
+        for step in range(start_step, args.steps):
+            batch = dict(data.batch(step))
+            batch.pop("positions", None)
+            batch.pop("segments", None)
+            if cfg.frontend == "vision":
+                batch["prefix"] = jnp.asarray(rng.standard_normal(
+                    (args.batch, cfg.n_prefix, cfg.d_model)),
+                    jnp.dtype(cfg.dtype))
+            if cfg.frontend == "audio":
+                batch = {
+                    "embeds": jnp.asarray(rng.standard_normal(
+                        (args.batch, args.seq, cfg.d_model)),
+                        jnp.dtype(cfg.dtype)),
+                    "labels": jnp.asarray(batch["labels"]),
+                }
+            t0 = time.time()
+            params, opt, metrics = step_fn(
+                params, opt, batch, jnp.int32(step))
+            loss = float(metrics["loss"])
+            dt = time.time() - t0
+            slow = watchdog.observe(step, dt)
+            losses.append(loss)
+            if step % args.log_every == 0 or slow:
+                print(f"step {step:5d} loss {loss:.4f} "
+                      f"ce {float(metrics['ce']):.4f} "
+                      f"gnorm {float(metrics['grad_norm']):.3f} "
+                      f"{dt*1e3:.0f} ms{'  [STRAGGLER]' if slow else ''}")
+            if store and args.ckpt_every and \
+                    (step + 1) % args.ckpt_every == 0:
+                store.save(step + 1, {"params": params, "opt": opt},
+                           blocking=False)
+    if store:
+        store.wait()
+        store.save(args.steps, {"params": params, "opt": opt})
+    print(f"final loss {losses[-1]:.4f} (first {losses[0]:.4f})")
+    return losses
+
+
+if __name__ == "__main__":
+    train()

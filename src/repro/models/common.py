@@ -1,0 +1,53 @@
+"""Shared layer primitives."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.sharding.ctx import constrain
+
+
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    normed = x32 * lax.rsqrt(var + eps)
+    return (normed * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding.  x: (B, S, H, hd); positions: (B, S) int32."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (B,S,half)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
+           w_down: jax.Array) -> jax.Array:
+    g = jax.nn.silu(constrain(jnp.einsum("...d,df->...f", x, w_gate),
+                              "batch", "seq", "mlp"))
+    u = constrain(jnp.einsum("...d,df->...f", x, w_up),
+                  "batch", "seq", "mlp")
+    return constrain(jnp.einsum("...f,fd->...d", g * u, w_down),
+                     "batch", "seq", "embed_act")
+
+
+def softcap(x: jax.Array, cap: float) -> jax.Array:
+    if not cap:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+def token_shift(x: jax.Array, prev: jax.Array | None = None) -> jax.Array:
+    """RWKV token shift: x_{t-1} along the seq axis.  x: (B, S, D).
+    ``prev``: (B, 1, D) carry-in from the previous chunk/step."""
+    if prev is None:
+        prev = jnp.zeros_like(x[:, :1])
+    return jnp.concatenate([prev, x[:, :-1]], axis=1)

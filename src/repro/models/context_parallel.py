@@ -1,0 +1,101 @@
+"""Context-parallel SSM/linear-attention prefill via the paper's exscan.
+
+With the sequence sharded over the data axis, each device scans only its
+local chunk; the carry-in state of device r is the composition of ALL
+earlier devices' chunk summaries — exactly an exclusive prefix "sum"
+under the (associative, expensive, non-commutative) state-composition
+operator:
+
+    mamba / diagonal SSM:  (A, B) with  h_out = A * h_in + B      (AFFINE)
+    rwkv wkv state:        (w, S) with  S_out = diag(w) S_in + S  (AFFINE,
+                            decay broadcast over the value dim)
+
+This is the paper's headline scenario: m is small (one state vector),
+⊕ is costly, and the number of communication rounds dominates — the
+123-doubling algorithm performs q = ceil(log2(p-1)+log2(4/3)) ppermute
+rounds with q-1 state compositions, vs 1+ceil(log2(p-1)) rounds for the
+shift-based scan and ~2 log2 p compositions for two-⊕ doubling.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.core import collectives
+from repro.models.mamba import ssm_scan_chunked
+from repro.models.rwkv import wkv_scan_chunked
+
+
+def _batch_spec(mesh, batch_sharded):
+    if not batch_sharded:
+        return None
+    bt = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    return bt or None
+
+
+def cp_ssm_scan(a, b, mesh, *, seq_axis: str = "data",
+                algorithm: str = "123", batch_sharded: bool = False):
+    """Distributed h_t = a_t h_{t-1} + b_t with seq sharded over
+    ``seq_axis``.  a, b: (B, S_global, ...) logically; returns h of the
+    same shape.  Call under jit with ``mesh`` set."""
+
+    def local(a_l, b_l):
+        Bsz = a_l.shape[0]
+        h0 = jnp.zeros((Bsz, *a_l.shape[2:]), a_l.dtype)
+        # local chunk scan (Pallas kernel on TPU; XLA scan elsewhere)
+        hs, _ = ssm_scan_chunked(a_l, b_l, h0)
+        # chunk summary: A_total = prod a, B_total = h_final from zero
+        a_tot = jnp.prod(a_l, axis=1)
+        b_tot = hs[:, -1]
+        # cross-device carry: the paper's collective, AFFINE monoid
+        _a_in, b_in = collectives.exscan(
+            (a_tot, b_tot), seq_axis, "affine", algorithm)
+        # carry entering this shard: global h0 = 0, so h_in = B-part
+        h_in = b_in
+        # correct local states:  h'_t = cum_a_t * h_in + h_t
+        cum_a = jnp.cumprod(a_l, axis=1)
+        hs = hs + cum_a * h_in[:, None]
+        return hs
+
+    bspec = _batch_spec(mesh, batch_sharded)
+    return jax.shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(P(bspec, seq_axis), P(bspec, seq_axis)),
+        out_specs=P(bspec, seq_axis),
+        check_vma=False,
+    )(a, b)
+
+
+def cp_wkv_scan(w, kv, mesh, *, seq_axis: str = "data",
+                algorithm: str = "123", batch_sharded: bool = False):
+    """Distributed RWKV wkv state scan, sequence-sharded.
+
+    w: (B, S, H, hd, 1) decays; kv: (B, S, H, hd, hd) outer products.
+    Returns the *pre-update* state S_{t-1} per position (as rwkv_block
+    consumes) for the full sequence."""
+
+    def local(w_l, kv_l):
+        Bsz = w_l.shape[0]
+        s0 = jnp.zeros((Bsz, *kv_l.shape[2:]), kv_l.dtype)
+        s_prev, s_final = wkv_scan_chunked(w_l, kv_l, s0)
+        w_tot = jnp.prod(w_l, axis=1)
+        w_in, s_in = collectives.exscan(
+            (w_tot, s_final), seq_axis, "affine", algorithm)
+        # correct: S'_prev[t] = cumw_prev[t] * s_in + s_prev[t]
+        cum_w = jnp.cumprod(w_l, axis=1)
+        cum_w_prev = jnp.concatenate(
+            [jnp.ones_like(cum_w[:, :1]), cum_w[:, :-1]], axis=1)
+        return s_prev + cum_w_prev * s_in[:, None]
+
+    bspec = _batch_spec(mesh, batch_sharded)
+    return jax.shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(P(bspec, seq_axis), P(bspec, seq_axis)),
+        out_specs=P(bspec, seq_axis),
+        check_vma=False,
+    )(w, kv)

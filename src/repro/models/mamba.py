@@ -1,0 +1,127 @@
+"""Mamba (selective SSM) block: chunked scan, O(chunk) state memory.
+
+TPU adaptation (DESIGN §2/§3): the (B, S, d_inner, d_state) step tensors
+are never materialized for the whole sequence — an outer ``lax.scan``
+walks ``ssm_chunk``-sized chunks carrying the (B, d_inner, d_state)
+boundary state, and within a chunk a log-depth ``associative_scan``
+solves the recurrence on the VPU.  On TPU the inner scan is served by
+the Pallas kernel (kernels/ssm_chunk_scan.py); the XLA formulation here
+is used on CPU and for the 512-device dry-run lowering.
+
+Context parallelism: when the sequence is sharded, the chunk-boundary
+carry across *devices* is composed with the paper's 123-doubling exscan
+under the AFFINE monoid (models/context_parallel.py).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import params as P
+from repro.models.common import rmsnorm
+from repro.sharding.ctx import constrain
+
+SSM_CHUNK = 64
+
+
+def _affine(lo, hi):
+    a1, b1 = lo
+    a2, b2 = hi
+    return a2 * a1, a2 * b1 + b2
+
+
+def ssm_scan_chunked(a, b, h0, chunk=SSM_CHUNK):
+    """h_t = a_t * h_{t-1} + b_t over axis 1.  a, b: (B, S, ...).
+
+    Returns (h: (B, S, ...), h_final: (B, ...)).
+    """
+    Bsz, S = a.shape[:2]
+    if S % chunk:
+        chunk = S  # short sequences: single chunk
+    n = S // chunk
+    a_c = a.reshape(Bsz, n, chunk, *a.shape[2:]).swapaxes(0, 1)
+    b_c = b.reshape(Bsz, n, chunk, *b.shape[2:]).swapaxes(0, 1)
+
+    def body(h_in, ab):
+        ac, bc = ab
+        cum_a, cum_b = lax.associative_scan(_affine, (ac, bc), axis=1)
+        h = cum_a * h_in[:, None] + cum_b
+        return h[:, -1], h
+
+    h_final, hs = lax.scan(body, h0, (a_c, b_c))
+    hs = hs.swapaxes(0, 1).reshape(Bsz, S, *a.shape[2:])
+    return hs, h_final
+
+
+def _causal_conv(x, conv_w, conv_b, prev=None):
+    """Depthwise causal conv along seq.  x: (B,S,di), conv_w: (K,di).
+
+    prev: (B, K-1, di) carry for decode/chunked mode (None = zero pad).
+    Returns (y, new_prev)."""
+    K = conv_w.shape[0]
+    if prev is None:
+        prev = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([prev, x], axis=1)
+    y = sum(
+        xp[:, i : i + x.shape[1]] * conv_w[i] for i in range(K)
+    )
+    return y + conv_b, xp[:, -(K - 1):]
+
+
+def mamba_block(cfg, p, x, *, cache=None):
+    """Pre-norm Mamba sub-block.  x: (B, S, d).
+
+    cache (decode): {"conv": (B, K-1, di), "h": (B, di, ds)}.
+    Returns (residual_out, new_cache)."""
+    B, S, _ = x.shape
+    di, ds = cfg.d_inner, cfg.d_state
+    dtr = P.dt_rank(cfg)
+    xn = rmsnorm(x, p["norm1"], cfg.norm_eps)
+    xz = constrain(jnp.einsum("bsd,de->bse", xn, p["in_proj"]),
+                   "batch", "seq", "d_inner")
+    x_in, z = jnp.split(xz, 2, axis=-1)
+
+    conv_prev = cache["conv"] if cache is not None else None
+    x_c, new_conv = _causal_conv(x_in, p["conv_w"], p["conv_b"], conv_prev)
+    x_c = jax.nn.silu(x_c)
+
+    dbc = jnp.einsum("bsi,ie->bse", x_c, p["x_proj"])
+    dt_raw = dbc[..., :dtr]
+    b_ssm = dbc[..., dtr : dtr + ds]
+    c_ssm = dbc[..., dtr + ds :]
+    dt = jax.nn.softplus(
+        jnp.einsum("bsr,ri->bsi", dt_raw, p["dt_proj"]) + p["dt_bias"]
+    )  # (B,S,di)
+    a_mat = -jnp.exp(p["a_log"].astype(jnp.float32))  # (di, ds)
+    # discretize: a = exp(dt*A) ; b = dt * B_t * x_t
+    a = jnp.exp(dt.astype(jnp.float32)[..., None] * a_mat)  # (B,S,di,ds)
+    b = (dt * x_c).astype(jnp.float32)[..., None] * \
+        b_ssm.astype(jnp.float32)[:, :, None, :]
+
+    if cache is None:
+        h0 = jnp.zeros((B, di, ds), jnp.float32)
+        hs, h_final = ssm_scan_chunked(a, b, h0)
+        new_h = h_final
+    elif S == 1:  # decode
+        h0 = cache["h"]
+        hs = a * h0[:, None] + b
+        new_h = hs[:, -1]
+    else:  # prefill into cache
+        hs, new_h = ssm_scan_chunked(a, b, cache["h"])
+    y = jnp.einsum("bsin,bsn->bsi", hs, c_ssm.astype(jnp.float32))
+    y = (y.astype(x.dtype) + x_c * p["d_skip"]) * jax.nn.silu(z)
+    out = constrain(jnp.einsum("bsi,id->bsd", y, p["out_proj"]),
+                    "batch", "seq", "embed_act")
+    new_cache = None
+    if cache is not None:
+        new_cache = {"conv": new_conv, "h": new_h}
+    return x + out, new_cache
+
+
+def init_mamba_cache(cfg, batch, dtype):
+    return {
+        "conv": jnp.zeros((batch, cfg.d_conv - 1, cfg.d_inner), dtype),
+        "h": jnp.zeros((batch, cfg.d_inner, cfg.d_state), jnp.float32),
+    }

@@ -1,0 +1,279 @@
+"""Parameter definitions: one table drives init, eval-shape, sharding.
+
+Every layer kind declares its parameters as ``ParamDef(shape, logical
+axes, init)``.  From that single source we derive:
+  * ``init_params``      — PRNG materialization (smoke tests, examples),
+  * ``abstract_params``  — ShapeDtypeStructs (512-device dry-run lowers
+                           without allocating a byte),
+  * ``logical_axes``     — pytree of logical-axis tuples consumed by
+                           sharding.rules,
+  * ``count_params``     — exact totals (MODEL_FLOPS accounting).
+
+Stacked layers: block params get a leading ("layers",) axis of length
+``n_repeats`` and are consumed by ``lax.scan`` (see model.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import LayerSpec, ModelConfig
+
+LANE = 128
+
+
+def round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]
+    init: str = "fan_in"  # "fan_in" | "zeros" | "ones" | "normal"
+    # marks routed-expert weights for active-param accounting
+    routed_expert: bool = False
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def vocab_padded(cfg: ModelConfig) -> int:
+    """Pad vocab to a lane multiple so TP sharding always divides."""
+    return round_up(cfg.vocab, LANE)
+
+
+def experts_padded(cfg: ModelConfig) -> int:
+    """Pad expert count to a multiple of 16 (the TP/EP degree) so the
+    expert dim shards; padded experts are masked off in the router."""
+    return round_up(cfg.n_experts, 16) if cfg.n_experts else 0
+
+
+def dt_rank(cfg: ModelConfig) -> int:
+    return max(1, math.ceil(cfg.d_model / 16))
+
+
+# ----------------------------- per-kind defs -----------------------------
+
+
+def _ffn_defs(cfg: ModelConfig, use_moe: bool) -> dict[str, ParamDef]:
+    d = cfg.d_model
+    out: dict[str, ParamDef] = {"norm2": ParamDef((d,), ("norm",), "ones")}
+    if not use_moe:
+        ff = cfg.d_ff
+        out.update(
+            w_gate=ParamDef((d, ff), ("embed", "mlp")),
+            w_up=ParamDef((d, ff), ("embed", "mlp")),
+            w_down=ParamDef((ff, d), ("mlp", "embed")),
+        )
+        return out
+    e = experts_padded(cfg)
+    ffe = cfg.moe_d_ff
+    out.update(
+        router=ParamDef((d, e), ("embed", None), "normal"),
+        moe_gate=ParamDef((e, d, ffe), ("experts", "embed", "expert_mlp"),
+                          routed_expert=True),
+        moe_up=ParamDef((e, d, ffe), ("experts", "embed", "expert_mlp"),
+                        routed_expert=True),
+        moe_down=ParamDef((e, ffe, d), ("experts", "expert_mlp", "embed"),
+                          routed_expert=True),
+    )
+    if cfg.n_shared_experts:
+        ffs = cfg.n_shared_experts * ffe
+        out.update(
+            shared_gate=ParamDef((d, ffs), ("embed", "mlp")),
+            shared_up=ParamDef((d, ffs), ("embed", "mlp")),
+            shared_down=ParamDef((ffs, d), ("mlp", "embed")),
+        )
+    return out
+
+
+def _attn_defs(cfg: ModelConfig, spec: LayerSpec) -> dict[str, ParamDef]:
+    d, hd = cfg.d_model, cfg.head_dim_
+    h, kv = cfg.n_heads, cfg.n_kv_heads
+    out = {
+        "norm1": ParamDef((d,), ("norm",), "ones"),
+        "wq": ParamDef((d, h * hd), ("embed", "heads")),
+        "wk": ParamDef((d, kv * hd), ("embed", "kv_heads")),
+        "wv": ParamDef((d, kv * hd), ("embed", "kv_heads")),
+        "wo": ParamDef((h * hd, d), ("heads", "embed")),
+    }
+    out.update(_ffn_defs(cfg, spec.use_moe))
+    return out
+
+
+def _mamba_defs(cfg: ModelConfig, spec: LayerSpec) -> dict[str, ParamDef]:
+    d, di, ds = cfg.d_model, cfg.d_inner, cfg.d_state
+    dtr = dt_rank(cfg)
+    out = {
+        "norm1": ParamDef((d,), ("norm",), "ones"),
+        "in_proj": ParamDef((d, 2 * di), ("embed", "d_inner")),
+        "conv_w": ParamDef((cfg.d_conv, di), ("conv", "d_inner")),
+        "conv_b": ParamDef((di,), ("d_inner",), "zeros"),
+        "x_proj": ParamDef((di, dtr + 2 * ds), ("d_inner", None)),
+        "dt_proj": ParamDef((dtr, di), (None, "d_inner")),
+        "dt_bias": ParamDef((di,), ("d_inner",), "zeros"),
+        "a_log": ParamDef((di, ds), ("d_inner", "d_state"), "ones"),
+        "d_skip": ParamDef((di,), ("d_inner",), "ones"),
+        "out_proj": ParamDef((di, d), ("d_inner", "embed")),
+    }
+    out.update(_ffn_defs(cfg, spec.use_moe))
+    return out
+
+
+def _rwkv_defs(cfg: ModelConfig, spec: LayerSpec) -> dict[str, ParamDef]:
+    d, ff = cfg.d_model, cfg.d_ff
+    out = {
+        "norm1": ParamDef((d,), ("norm",), "ones"),
+        # time-mix interpolation coefficients (token shift)
+        "mu_r": ParamDef((d,), ("norm",), "zeros"),
+        "mu_k": ParamDef((d,), ("norm",), "zeros"),
+        "mu_v": ParamDef((d,), ("norm",), "zeros"),
+        "mu_w": ParamDef((d,), ("norm",), "zeros"),
+        "mu_g": ParamDef((d,), ("norm",), "zeros"),
+        "wr": ParamDef((d, d), ("embed", "heads")),
+        "wk": ParamDef((d, d), ("embed", "heads")),
+        "wv": ParamDef((d, d), ("embed", "heads")),
+        "wg": ParamDef((d, d), ("embed", "heads")),
+        # data-dependent decay (Finch): w_t = exp(-exp(decay(x_t)))
+        "w_decay": ParamDef((d, d), ("embed", "heads"), "zeros"),
+        "decay_bias": ParamDef((d,), ("heads",), "zeros"),
+        "bonus_u": ParamDef((d,), ("heads",), "zeros"),
+        "wo": ParamDef((d, d), ("heads", "embed")),
+        # channel mix
+        "norm2": ParamDef((d,), ("norm",), "ones"),
+        "mu_ck": ParamDef((d,), ("norm",), "zeros"),
+        "mu_cr": ParamDef((d,), ("norm",), "zeros"),
+        "cm_wk": ParamDef((d, ff), ("embed", "mlp")),
+        "cm_wv": ParamDef((ff, d), ("mlp", "embed")),
+        "cm_wr": ParamDef((d, d), ("embed", "mlp")),
+    }
+    return out
+
+
+_KIND_DEFS = {"attn": _attn_defs, "mamba": _mamba_defs, "rwkv": _rwkv_defs}
+
+
+def block_defs(cfg: ModelConfig, spec: LayerSpec) -> dict[str, ParamDef]:
+    return _KIND_DEFS[spec.kind](cfg, spec)
+
+
+def model_defs(cfg: ModelConfig):
+    """Full model: returns (top_level_defs, per_position_block_defs)."""
+    d = cfg.d_model
+    vp = vocab_padded(cfg)
+    top: dict[str, ParamDef] = {}
+    if cfg.frontend != "audio":
+        top["tok_embed"] = ParamDef((vp, d), ("vocab", "embed"), "normal")
+    top["final_norm"] = ParamDef((d,), ("norm",), "ones")
+    if not cfg.tie_embeddings:
+        top["lm_head"] = ParamDef((d, vp), ("embed", "vocab"))
+    blocks = tuple(block_defs(cfg, spec) for spec in cfg.pattern())
+    return top, blocks
+
+
+# ----------------------------- materialize -----------------------------
+
+
+def _iter_defs(cfg: ModelConfig) -> Iterator[tuple[tuple, ParamDef, bool]]:
+    """Yields (path, def, stacked) for every parameter."""
+    top, blocks = model_defs(cfg)
+    for name, d in top.items():
+        yield (name,), d, False
+    for j, defs in enumerate(blocks):
+        for name, d in defs.items():
+            yield ("blocks", j, name), d, True
+
+
+def _stacked(d: ParamDef, n_repeats: int) -> ParamDef:
+    return ParamDef((n_repeats, *d.shape), ("layers", *d.axes), d.init,
+                    d.routed_expert)
+
+
+def _build(cfg: ModelConfig, leaf_fn):
+    top, blocks = model_defs(cfg)
+    r = cfg.n_repeats
+    out_top = {k: leaf_fn(d) for k, d in top.items()}
+    out_blocks = tuple(
+        {k: leaf_fn(_stacked(d, r)) for k, d in defs.items()}
+        for defs in blocks
+    )
+    return {"top": out_top, "blocks": out_blocks}
+
+
+def abstract_params(cfg: ModelConfig):
+    dtype = jnp.dtype(cfg.dtype)
+
+    def leaf(d: ParamDef):
+        return jax.ShapeDtypeStruct(d.shape, dtype)
+
+    return _build(cfg, leaf)
+
+
+def logical_axes(cfg: ModelConfig):
+    return _build(cfg, lambda d: d.axes)
+
+
+def init_params(cfg: ModelConfig, key: jax.Array):
+    dtype = jnp.dtype(cfg.dtype)
+    defs_list = list(_iter_defs(cfg))
+    keys = jax.random.split(key, len(defs_list))
+    vals = {}
+    r = cfg.n_repeats
+    for k, (path, d, stacked) in zip(keys, defs_list):
+        shape = (r, *d.shape) if stacked else d.shape
+        if d.init == "zeros":
+            v = jnp.zeros(shape, dtype)
+        elif d.init == "ones":
+            v = jnp.ones(shape, dtype)
+        elif d.init == "normal":
+            v = (0.02 * jax.random.normal(k, shape, jnp.float32)).astype(dtype)
+        else:  # fan_in
+            fan_in = d.shape[-2] if len(d.shape) >= 2 else d.shape[-1]
+            scale = 1.0 / math.sqrt(fan_in)
+            v = (scale * jax.random.normal(k, shape, jnp.float32)).astype(dtype)
+        if path[-1] == "a_log":
+            # mamba: A = -exp(a_log); init a_log = log(1..d_state)
+            ds = d.shape[-1]
+            base = jnp.log(jnp.arange(1, ds + 1, dtype=jnp.float32))
+            v = jnp.broadcast_to(base, shape).astype(dtype)
+        vals[path] = v
+    top = {p[0]: v for p, v in vals.items() if len(p) == 1}
+    n_pos = len(cfg.pattern())
+    blocks = tuple(
+        {p[2]: v for p, v in vals.items()
+         if len(p) == 3 and p[0] == "blocks" and p[1] == j}
+        for j in range(n_pos)
+    )
+    return {"top": top, "blocks": blocks}
+
+
+def count_params(cfg: ModelConfig, active_only: bool = False) -> int:
+    total = 0
+    r = cfg.n_repeats
+    e_pad = experts_padded(cfg)
+    for _, d, stacked in _iter_defs(cfg):
+        n = int(np.prod(d.shape)) * (r if stacked else 1)
+        if active_only and d.routed_expert and e_pad:
+            n = n * cfg.top_k // e_pad
+        total += n
+    return total
+
+
+def param_shardings(cfg: ModelConfig, mesh, rules):
+    """NamedSharding pytree matching abstract_params' structure."""
+    axes = logical_axes(cfg)
+    shapes = abstract_params(cfg)
+    return jax.tree.map(
+        lambda log, shp: rules.shard(log, mesh, shp.shape),
+        axes,
+        shapes,
+        is_leaf=lambda x: isinstance(x, tuple)
+        and all(isinstance(el, (str, type(None))) for el in x),
+    )

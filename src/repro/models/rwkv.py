@@ -1,0 +1,170 @@
+"""RWKV6 ("Finch") block: data-dependent-decay linear attention.
+
+State per head is a (hd, hd) matrix updated as
+    S_t = diag(w_t) S_t-1 + k_t ⊗ v_t,      out_t = r_t · (S_t-1 + u⊙k_t ⊗ v_t)
+— an AFFINE-monoid recurrence, scanned in chunks exactly like mamba.py
+(the chunk-boundary carry across sequence-sharded devices is composed
+with the paper's exscan; see models/context_parallel.py).
+
+Simplifications vs the reference implementation (noted per DESIGN §2):
+data-dependent decay uses a single linear projection instead of the
+LoRA-factored one, and group-norm on the wkv output is an RMS norm per
+head.  Neither changes parallel structure, FLOP shape or state layout.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.common import rmsnorm, token_shift
+from repro.sharding.ctx import constrain
+
+HEAD_DIM = 64
+WKV_CHUNK = 32
+
+
+def _affine(lo, hi):
+    a1, b1 = lo
+    a2, b2 = hi
+    return a2 * a1, a2 * b1 + b2
+
+
+def _lerp(x, prev, mu):
+    return x + (prev - x) * mu
+
+
+def wkv_scan_chunked(w, kv, s0, chunk=WKV_CHUNK):
+    """S_t = w_t * S_{t-1} + kv_t.  w: (B,S,H,hd,1), kv: (B,S,H,hd,hd).
+
+    Returns (S_prev per step: (B,S,H,hd,hd), S_final: (B,H,hd,hd)) —
+    note the *exclusive* (pre-update) state is returned, as the wkv
+    output reads S_{t-1}."""
+    B, S = kv.shape[:2]
+    if S % chunk:
+        chunk = S
+    n = S // chunk
+    w_c = w.reshape(B, n, chunk, *w.shape[2:]).swapaxes(0, 1)
+    kv_c = kv.reshape(B, n, chunk, *kv.shape[2:]).swapaxes(0, 1)
+
+    def body(s_in, wkv_):
+        wc, kvc = wkv_
+        cum_a, cum_b = lax.associative_scan(_affine, (wc, kvc), axis=1)
+        s_incl = cum_a * s_in[:, None] + cum_b  # (B,C,H,hd,hd)
+        s_prev = jnp.concatenate([s_in[:, None], s_incl[:, :-1]], axis=1)
+        return s_incl[:, -1], s_prev
+
+    s_final, s_prevs = lax.scan(body, s0, (w_c, kv_c))
+    s_prevs = s_prevs.swapaxes(0, 1).reshape(B, S, *kv.shape[2:])
+    return s_prevs, s_final
+
+
+def rwkv_block(cfg, p, x, *, cache=None, mesh=None):
+    """Full RWKV6 layer (time-mix + channel-mix).  x: (B, S, d).
+
+    cache (decode): {"shift": (B,1,d), "cm_shift": (B,1,d),
+                     "state": (B,H,hd,hd) f32}.
+
+    Under the fsdp_sp strategy (sequence sharded over "model") the wkv
+    recurrence runs CONTEXT-PARALLEL: local chunk scans + the paper's
+    123-doubling exscan carrying the (decay, state) AFFINE monoid
+    across sequence shards (models/context_parallel.py)."""
+    B, S, d = x.shape
+    hd = HEAD_DIM
+    H = d // hd
+
+    # ---------------- time mix ----------------
+    xn = rmsnorm(x, p["norm1"], cfg.norm_eps)
+    prev = cache["shift"] if cache is not None else None
+    xp = token_shift(xn, prev)
+    xr = _lerp(xn, xp, p["mu_r"])
+    xk = _lerp(xn, xp, p["mu_k"])
+    xv = _lerp(xn, xp, p["mu_v"])
+    xw = _lerp(xn, xp, p["mu_w"])
+    xg = _lerp(xn, xp, p["mu_g"])
+    r = constrain(jnp.einsum("bsd,de->bse", xr, p["wr"]),
+                  "batch", "seq", "heads").reshape(B, S, H, hd)
+    k = constrain(jnp.einsum("bsd,de->bse", xk, p["wk"]),
+                  "batch", "seq", "heads").reshape(B, S, H, hd)
+    v = constrain(jnp.einsum("bsd,de->bse", xv, p["wv"]),
+                  "batch", "seq", "heads").reshape(B, S, H, hd)
+    g = jax.nn.silu(constrain(jnp.einsum("bsd,de->bse", xg, p["wg"]),
+                              "batch", "seq", "heads"))
+    # Finch data-dependent decay in (0, 1)
+    logw = -jnp.exp(
+        jnp.clip(
+            jnp.einsum("bsd,de->bse", xw, p["w_decay"]) + p["decay_bias"],
+            -8.0, 4.0,
+        ).astype(jnp.float32)
+    )
+    w = jnp.exp(logw).reshape(B, S, H, hd)
+    u = p["bonus_u"].reshape(H, hd)
+
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    kv = kf[..., :, None] * vf[..., None, :]  # (B,S,H,hd,hd)
+    w_b = w[..., :, None]  # decay broadcasts over the v dim
+
+    tp = mesh.shape.get("model", 1) if mesh is not None else 1
+    use_cp = (cache is None and mesh is not None
+              and cfg.sharding_strategy == "fsdp_sp"
+              and S % tp == 0 and S >= tp and tp > 1)
+    if use_cp:
+        from repro.models.context_parallel import cp_wkv_scan
+
+        n_bt = 1
+        for a in ("pod", "data"):
+            if a in mesh.axis_names:
+                n_bt *= mesh.shape[a]
+        s_prev = cp_wkv_scan(w_b, kv, mesh, seq_axis="model",
+                             algorithm=cfg.exscan_algorithm,
+                             batch_sharded=(B % n_bt == 0))
+        s_final = None  # training path: final state unused
+    elif cache is None:
+        s0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+        s_prev, s_final = wkv_scan_chunked(w_b, kv, s0)
+    elif S == 1:  # decode
+        s0 = cache["state"]
+        s_prev = s0[:, None]
+        s_final = w_b[:, 0] * s0 + kv[:, 0]
+    else:  # prefill into cache
+        s_prev, s_final = wkv_scan_chunked(w_b, kv, cache["state"])
+
+    att = s_prev + u.astype(jnp.float32)[..., :, None] * kv
+    out = jnp.einsum("bshi,bshij->bshj", r.astype(jnp.float32), att)
+    # per-head RMS norm (stand-in for reference group-norm)
+    var = jnp.mean(out * out, axis=-1, keepdims=True)
+    out = out * lax.rsqrt(var + cfg.norm_eps)
+    out = (out.reshape(B, S, d).astype(x.dtype)) * g
+    x = x + constrain(jnp.einsum("bse,ed->bsd", out, p["wo"]),
+                      "batch", "seq", "embed_act")
+
+    # ---------------- channel mix ----------------
+    xn2 = rmsnorm(x, p["norm2"], cfg.norm_eps)
+    prev2 = cache["cm_shift"] if cache is not None else None
+    xp2 = token_shift(xn2, prev2)
+    xk2 = _lerp(xn2, xp2, p["mu_ck"])
+    xr2 = _lerp(xn2, xp2, p["mu_cr"])
+    kk = constrain(jnp.einsum("bsd,df->bsf", xk2, p["cm_wk"]),
+                   "batch", "seq", "mlp")
+    kk = jnp.square(jax.nn.relu(kk))
+    cm = jnp.einsum("bsf,fd->bsd", kk, p["cm_wv"])
+    rr = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr2, p["cm_wr"]))
+    x = x + rr * cm
+
+    new_cache = None
+    if cache is not None:
+        new_cache = {"shift": xn[:, -1:], "cm_shift": xn2[:, -1:],
+                     "state": s_final}
+    return x, new_cache
+
+
+def init_rwkv_cache(cfg, batch, dtype):
+    d = cfg.d_model
+    H = d // HEAD_DIM
+    return {
+        "shift": jnp.zeros((batch, 1, d), dtype),
+        "cm_shift": jnp.zeros((batch, 1, d), dtype),
+        "state": jnp.zeros((batch, H, HEAD_DIM, HEAD_DIM), jnp.float32),
+    }

@@ -1,0 +1,10 @@
+"""Optimizers."""
+
+from repro.optim.adamw import (
+    AdamWState,
+    adamw_init,
+    adamw_update,
+    clip_by_global_norm,
+    cosine_lr,
+    global_norm,
+)

@@ -1,0 +1,48 @@
+"""Activation-sharding context: logical constraints inside model code.
+
+Layer code calls ``constrain(x, "batch", None, "heads")`` at the few
+places where GSPMD's propagation would otherwise choose a bad layout
+(e.g. resharding a million-token batch instead of all-gathering a
+0.5 GB weight — observed in the baseline dry-run, see EXPERIMENTS.md
+§Perf iteration 0).  Logical names resolve through the same rule table
+as parameters; axes that don't divide are dropped, and with no active
+context (plain single-device tests) the call is a no-op.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+from jax.sharding import NamedSharding
+
+from repro.sharding import rules as rules_lib
+
+_tls = threading.local()
+
+
+@contextlib.contextmanager
+def use_mesh_rules(mesh, rules=None):
+    prev = getattr(_tls, "ctx", None)
+    _tls.ctx = (mesh, rules or rules_lib.DEFAULT)
+    try:
+        yield
+    finally:
+        _tls.ctx = prev
+
+
+def active() -> bool:
+    return getattr(_tls, "ctx", None) is not None
+
+
+def constrain(x, *logical):
+    ctx = getattr(_tls, "ctx", None)
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    if mesh.devices.size == 1:
+        return x
+    spec = rules.mesh_axes(logical, mesh)
+    spec = rules_lib.divisible_spec(spec, x.shape, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -1,0 +1,171 @@
+"""Logical-axis partition rules (MaxText-style).
+
+Every parameter/activation dimension carries a *logical* axis name; a
+rule table maps logical names to mesh axes.  Changing a sharding
+strategy (the §Perf hillclimb lever) means editing ONE table, not the
+model code.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# Mesh axis names (see launch/mesh.py):
+#   single pod: ("data", "model");  multi-pod: ("pod", "data", "model")
+
+# logical axis -> mesh axes (None = replicated)
+DEFAULT_RULES: dict[str, tuple[str, ...] | str | None] = {
+    # activations
+    "batch": ("pod", "data"),
+    "seq": None,
+    "seq_shard": ("data",),  # context/sequence parallelism (long_500k)
+    "embed_act": None,
+    # params — FSDP shards the d_model ("embed") dim over the data axes,
+    # TP shards heads / ffn-hidden / experts / vocab over "model".
+    "embed": ("pod", "data"),
+    "heads": ("model",),
+    "kv_heads": ("model",),  # after duplication to TP degree
+    "head_dim": None,
+    "mlp": ("model",),
+    "vocab": ("model",),
+    "experts": ("model",),  # expert parallelism
+    "expert_mlp": None,
+    "d_inner": ("model",),  # mamba inner channels
+    "d_state": None,
+    "conv": None,
+    "norm": None,
+    # kv cache
+    "cache_batch": ("pod", "data"),
+    "cache_seq": None,
+    "cache_kv": ("model",),
+    # long-context decode: sequence-sharded cache
+    "cache_seq_shard": ("data",),
+    # fallback when kv heads can't shard over TP: cache seq over model
+    "cache_seq_tp": ("model",),
+    # layer-stacking axis of scanned params
+    "layers": None,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Rules:
+    table: dict
+
+    def mesh_axes(self, logical: tuple[str | None, ...], mesh: Mesh):
+        """Resolve logical axes to a PartitionSpec valid for ``mesh``.
+
+        Axes absent from the mesh (e.g. "pod" on a single-pod mesh) are
+        dropped; a dim is left unsharded unless its size is divisible by
+        the product of the mapped mesh axis sizes (caller guarantees the
+        shape, we guarantee validity).
+        """
+        spec = []
+        for name in logical:
+            if name is None:
+                spec.append(None)
+                continue
+            mapped = self.table.get(name)
+            if mapped is None:
+                spec.append(None)
+                continue
+            if isinstance(mapped, str):
+                mapped = (mapped,)
+            present = tuple(a for a in mapped if a in mesh.axis_names)
+            spec.append(present if present else None)
+        return P(*spec)
+
+    def shard(self, logical, mesh: Mesh, shape=None):
+        """NamedSharding for a logical annotation; if ``shape`` is given,
+        drop shardings that do not divide the dimension."""
+        spec = self.mesh_axes(logical, mesh)
+        if shape is not None:
+            spec = divisible_spec(spec, shape, mesh)
+        return NamedSharding(mesh, spec)
+
+
+def divisible_spec(spec: P, shape: tuple[int, ...], mesh: Mesh) -> P:
+    """Drop mesh axes from a spec wherever they don't divide the dim."""
+    axis_size = dict(zip(mesh.axis_names, mesh.devices.shape))
+    out = []
+    for dim, entry in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        if entry is None:
+            out.append(None)
+            continue
+        axes = (entry,) if isinstance(entry, str) else tuple(entry)
+        kept = []
+        prod = 1
+        for a in axes:
+            if dim % (prod * axis_size[a]) == 0:
+                kept.append(a)
+                prod *= axis_size[a]
+        out.append(tuple(kept) if kept else None)
+    return P(*out)
+
+
+DEFAULT = Rules(DEFAULT_RULES)
+
+# FSDP + sequence-parallel strategy (§Perf hillclimb): no tensor
+# parallelism — the "model" axis carries (a) an extra FSDP factor for
+# params/optimizer and (b) the activations' SEQUENCE dim, so the only
+# per-layer collectives are the FSDP weight all-gathers and a KV gather
+# in attention, instead of TP's 2+ full-activation reductions per layer.
+FSDP_SP_RULES = dict(
+    DEFAULT_RULES,
+    **{
+        "seq": ("model",),
+        "seq_kv": None,
+        "embed": ("pod", "data", "model"),
+        "heads": None,
+        "kv_heads": None,
+        "mlp": None,
+        "d_inner": None,
+        "vocab": None,
+        "experts": ("model",),  # EP stays on "model"
+        "cache_kv": None,
+        "cache_seq": ("model",),
+    },
+)
+
+# Weight-stationary decode (§Perf): small per-step token counts make
+# moving activations cheaper than FSDP-gathering weights — activations
+# carry their d_model dim sharded over the FSDP axes (partial-sum
+# matmuls + tiny psums), batch replicated outside attention; weights
+# never move.  The KV cache stays batch-sharded.
+DECODE_WS_RULES = dict(
+    DEFAULT_RULES,
+    **{
+        "batch": None,
+        "embed_act": ("pod", "data"),
+    },
+)
+
+STRATEGIES = {
+    "tp": Rules(DEFAULT_RULES),
+    "fsdp_sp": Rules(FSDP_SP_RULES),
+    "decode_ws": Rules(DECODE_WS_RULES),
+}
+
+
+def rules_for(cfg) -> Rules:
+    return STRATEGIES[getattr(cfg, "sharding_strategy", "tp")]
+
+
+def make_rules(**overrides) -> Rules:
+    table = dict(DEFAULT_RULES)
+    table.update(overrides)
+    return Rules(table)
+
+
+def tree_shardings(rules: Rules, logical_tree, mesh: Mesh, shape_tree):
+    """Map a pytree of logical annotations + shapes to NamedShardings."""
+    return jax.tree.map(
+        lambda log, shp: rules.shard(log, mesh, shp.shape),
+        logical_tree,
+        shape_tree,
+        is_leaf=lambda x: isinstance(x, tuple)
+        and all(isinstance(e, (str, type(None))) for e in x),
+    )

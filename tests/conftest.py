@@ -1,0 +1,8 @@
+import os
+import sys
+
+_HERE = os.path.dirname(os.path.abspath(__file__))
+_SRC = os.path.join(os.path.dirname(_HERE), "src")
+for p in (_HERE, _SRC):
+    if p not in sys.path:
+        sys.path.insert(0, p)

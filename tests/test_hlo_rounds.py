@@ -1,0 +1,47 @@
+"""Compiled-artifact fidelity: the paper's round counts survive XLA.
+
+Lower+compile each exscan algorithm on an 8-device mesh and count the
+``collective-permute`` ops in the optimized HLO — they must equal the
+theoretical round counts (Theorem 1 etc.).  This is the same parse the
+roofline harness uses, so it also locks the §Roofline collective
+accounting against regressions.
+"""
+
+import pytest
+
+from helpers import run_with_devices
+
+_CODE = """
+import jax, numpy as np, re
+from jax.sharding import Mesh, PartitionSpec as P
+from jax import shard_map
+import repro.core.collectives as ex
+from repro.launch import roofline as rl
+
+p = 8
+mesh = Mesh(np.array(jax.devices()).reshape(p), ("x",))
+x = np.arange(p * 4, dtype=np.int32).reshape(p, 4)
+
+for alg in ("123", "1doubling", "two_op", "ring"):
+    f = jax.jit(shard_map(lambda v: ex.exscan(v, "x", "add", alg),
+                          mesh=mesh, in_specs=P("x"), out_specs=P("x")))
+    compiled = f.lower(x).compile()
+    stats = rl.parse_collectives(compiled.as_text())
+    got = stats.op_counts.get("collective-permute", 0)
+    want = ex.expected_rounds(alg, p)
+    assert got == want, (alg, got, want)
+    print("OK", alg, got)
+
+# native = one all-gather, zero permutes
+f = jax.jit(shard_map(lambda v: ex.exscan(v, "x", "add", "native"),
+                      mesh=mesh, in_specs=P("x"), out_specs=P("x")))
+stats = rl.parse_collectives(f.lower(x).compile().as_text())
+assert stats.op_counts.get("collective-permute", 0) == 0
+assert stats.op_counts.get("all-gather", 0) >= 1
+print("OK native")
+"""
+
+
+def test_hlo_round_counts_match_theory():
+    out = run_with_devices(_CODE, 8, x64=False)
+    assert out.count("OK") == 5

@@ -1,0 +1,42 @@
+"""Sharding-strategy equivalence: fsdp_sp == tp == single-device, for a
+dense and a MoE arch on a 2x4 mesh (8 fake devices, subprocess)."""
+
+import pytest
+
+from helpers import run_with_devices
+
+_CODE = """
+import jax, numpy as np, jax.numpy as jnp
+from jax.sharding import Mesh
+from repro import configs
+from repro.models.model import Model
+
+rng = np.random.default_rng(3)
+tokens = jnp.asarray(rng.integers(0, 256, (4, 32)), jnp.int32)
+
+mesh1 = Mesh(np.array(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
+cfg0 = configs.get_smoke("{arch}", capacity_factor=16.0)
+m1 = Model(cfg0, mesh1)
+params = m1.init_params(jax.random.PRNGKey(0))
+with jax.set_mesh(mesh1):
+    ref = np.asarray(jax.jit(m1.forward)(params, tokens)[0])
+
+mesh = Mesh(np.array(jax.devices()).reshape(2, 4), ("data", "model"))
+cfg = configs.get_smoke("{arch}", capacity_factor=16.0,
+                        sharding_strategy="{strategy}")
+m = Model(cfg, mesh)
+with jax.set_mesh(mesh):
+    got = np.asarray(jax.jit(m.forward)(params, tokens)[0])
+err = float(np.max(np.abs(got - ref)))
+assert err < 3e-4, err
+print("OK", err)
+"""
+
+
+@pytest.mark.parametrize("arch", ["llama3_8b", "qwen2_moe_a2_7b",
+                                  "rwkv6_1_6b"])
+@pytest.mark.parametrize("strategy", ["tp", "fsdp_sp"])
+def test_strategy_equivalence(arch, strategy):
+    out = run_with_devices(_CODE.format(arch=arch, strategy=strategy),
+                           8, x64=False, timeout=900)
+    assert "OK" in out
