@@ -38,15 +38,17 @@ import os, time, json
 import jax, numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 from jax import shard_map
-import repro.core.collectives as ex
+from repro.core.scan_api import ScanSpec, scan
 
 p = {p}
 mesh = Mesh(np.array(jax.devices()).reshape(p), ("x",))
 out = {{}}
 for alg in {algs}:
+    spec = ScanSpec(kind="exclusive", monoid="xor", algorithm=alg,
+                    axis_name="x")
     for m in {ems}:
         x = np.arange(p * m, dtype=np.int64).reshape(p, m)
-        f = jax.jit(shard_map(lambda v: ex.exscan(v, "x", "xor", alg),
+        f = jax.jit(shard_map(lambda v: scan(v, spec),
                     mesh=mesh, in_specs=P("x"), out_specs=P("x")))
         f(x)  # compile+warm
         reps = 30 if m <= 1000 else 10

@@ -1,7 +1,9 @@
 """In-situ MoE dispatch benchmark: full MoE layer forward wall time with
 each exscan algorithm driving the global-offset collective (8 fake CPU
 devices, 2 data x 4 model).  The exscan runs once per MoE layer per
-step, on an (E,)-int vector — the paper's small-m regime."""
+step, on an (E,)-int vector — the paper's small-m regime.  The sweep is
+driven through ``ScanSpec`` (including ``"auto"``, which shows what the
+cost-model planner picks for this payload)."""
 
 from __future__ import annotations
 
@@ -10,20 +12,23 @@ import os
 import subprocess
 import sys
 
-ALGS = ("123", "1doubling", "two_op", "native")
+ALGS = ("auto", "123", "1doubling", "two_op", "native")
 
 _CODE = """
 import time, json
 import jax, numpy as np, jax.numpy as jnp
 from jax.sharding import Mesh
 from repro import configs
+from repro.core.scan_api import ScanSpec
 from repro.models.model import Model
 
 mesh = Mesh(np.array(jax.devices()).reshape(2, 4), ("data", "model"))
 out = {}
 rng = np.random.default_rng(0)
 for alg in %s:
-    cfg = configs.get_smoke("qwen2_moe_a2_7b", exscan_algorithm=alg)
+    cfg = configs.get_smoke(
+        "qwen2_moe_a2_7b",
+        scan=ScanSpec(kind="exclusive", algorithm=alg))
     m = Model(cfg, mesh)
     params = m.init_params(jax.random.PRNGKey(0))
     tokens = jnp.asarray(rng.integers(0, cfg.vocab, (8, 64)), jnp.int32)

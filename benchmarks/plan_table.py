@@ -1,0 +1,39 @@
+"""Planner decision table: which algorithm ``"auto"`` picks per (p, m).
+
+Pure planning math — no devices, no tracing: for each rank count p and
+payload size m the rows give the chosen algorithm plus its predicted
+rounds and cost-model latency, under both interconnect tiers
+(ICI intra-pod, DCI cross-pod; launch/mesh.py parameters).  This is the
+paper's "regimes" story made executable: 123-doubling owns the small-m
+rows, the pipelined ring takes over as m grows.
+"""
+
+from __future__ import annotations
+
+from repro.core.scan_api import ScanSpec, plan
+from repro.launch.mesh import DCI_COST, ICI_COST
+
+PS = (8, 36, 256, 512)
+MS = (8, 1024, 65_536, 1_048_576, 16_777_216)  # payload bytes
+
+TIERS = (("ici", ICI_COST), ("dci", DCI_COST))
+
+
+def run(csv_rows: list):
+    spec = ScanSpec(kind="exclusive", monoid="add", algorithm="auto")
+    for tier, cm in TIERS:
+        for p in PS:
+            for m in MS:
+                pl = plan(spec, p=p, nbytes=m, cost_model=cm)
+                key = f"plan/{tier}/p{p}/m{m}"
+                csv_rows.append((key + "/algorithm", pl.algorithm,
+                                 "auto_choice"))
+                csv_rows.append((key + "/rounds", pl.rounds, "rounds"))
+                csv_rows.append((key + "/cost_us", pl.cost * 1e6,
+                                 "us_abg_model"))
+    return csv_rows
+
+
+if __name__ == "__main__":
+    for r in run([]):
+        print(",".join(str(x) for x in r))

@@ -2,9 +2,11 @@
 
 Prints ``name,value,derived`` CSV.  Modules:
   * round_counts          — Theorem 1 rounds/⊕ table (exact)
+  * plan_table            — ScanSpec("auto") planner decisions per
+                            (p, payload, interconnect tier)
   * exscan_table1         — paper Table 1/Fig 1 analogue (measured on a
                             fake-device mesh + α-β-γ modeled for pods)
-  * moe_dispatch          — in-situ MoE layer, exscan algorithm sweep
+  * moe_dispatch          — in-situ MoE layer, ScanSpec algorithm sweep
   * ssm_context_parallel  — in-situ CP-SSM prefill, algorithm sweep
   * roofline summary      — from the latest dry-run JSON, if present
 """
@@ -43,12 +45,13 @@ def roofline_rows(csv_rows: list):
 
 
 def main() -> None:
-    from benchmarks import exscan_table1, moe_dispatch, round_counts, \
-        ssm_context_parallel
+    from benchmarks import exscan_table1, moe_dispatch, plan_table, \
+        round_counts, ssm_context_parallel
 
     rows: list = []
     modules = [
         ("round_counts", round_counts.run),
+        ("plan_table", plan_table.run),
         ("exscan_table1", exscan_table1.run),
         ("moe_dispatch", moe_dispatch.run),
         ("ssm_context_parallel", ssm_context_parallel.run),

@@ -3,7 +3,8 @@ each exscan algorithm (8 fake CPU devices, sequence sharded).
 
 The AFFINE ⊕ here composes (decay, state) pairs — the "expensive
 operator" case where the 123-doubling algorithm's q-1 applications beat
-two-⊕ doubling's ~2·log2(p)."""
+two-⊕ doubling's ~2·log2(p).  Algorithms are pinned per run through
+``ScanSpec`` (plus ``"auto"``, showing the planner's pick)."""
 
 from __future__ import annotations
 
@@ -12,12 +13,13 @@ import os
 import subprocess
 import sys
 
-ALGS = ("123", "1doubling", "two_op")
+ALGS = ("auto", "123", "1doubling", "two_op")
 
 _CODE = """
 import time, json
 import jax, numpy as np, jax.numpy as jnp
 from jax.sharding import Mesh
+from repro.core.scan_api import ScanSpec
 from repro.models.context_parallel import cp_ssm_scan
 
 mesh = Mesh(np.array(jax.devices()).reshape(8), ("data",))
@@ -27,8 +29,9 @@ a = jnp.asarray(rng.uniform(0.9, 1.0, (B, S, D)), jnp.float32)
 b = jnp.asarray(rng.standard_normal((B, S, D)), jnp.float32)
 out = {}
 for alg in %s:
+    spec = ScanSpec(kind="exclusive", monoid="affine", algorithm=alg)
     with jax.set_mesh(mesh):
-        f = jax.jit(lambda x, y: cp_ssm_scan(x, y, mesh, algorithm=alg))
+        f = jax.jit(lambda x, y: cp_ssm_scan(x, y, mesh, spec=spec))
         jax.block_until_ready(f(a, b))
         ts = []
         for _ in range(10):

@@ -26,6 +26,7 @@ import numpy as np  # noqa: E402
 from jax.sharding import Mesh  # noqa: E402
 
 import repro.core.collectives as collectives  # noqa: E402
+from repro.core.scan_api import ScanSpec  # noqa: E402
 from repro.models.context_parallel import cp_ssm_scan  # noqa: E402
 from repro.models.mamba import ssm_scan_chunked  # noqa: E402
 
@@ -40,11 +41,12 @@ def main():
 
     ref, _ = ssm_scan_chunked(a, b, jnp.zeros((B, D)))
 
-    for alg in ("123", "1doubling", "two_op"):
+    for alg in ("auto", "123", "1doubling", "two_op"):
+        spec = ScanSpec(kind="exclusive", monoid="affine", algorithm=alg)
         with collectives.collect_stats() as stats:
             with jax.set_mesh(mesh):
-                f = jax.jit(lambda x, y, alg=alg: cp_ssm_scan(
-                    x, y, mesh, algorithm=alg))
+                f = jax.jit(lambda x, y, spec=spec: cp_ssm_scan(
+                    x, y, mesh, spec=spec))
                 out = f(a, b)
                 jax.block_until_ready(out)
                 t0 = time.perf_counter()

@@ -24,6 +24,7 @@ import numpy as np  # noqa: E402
 from jax.sharding import Mesh  # noqa: E402
 
 from repro import configs  # noqa: E402
+from repro.core.scan_api import ScanSpec  # noqa: E402
 from repro.models.model import Model  # noqa: E402
 
 
@@ -33,8 +34,10 @@ def main():
     tokens = jnp.asarray(rng.integers(0, 256, (8, 64)), jnp.int32)
 
     outs = {}
-    for alg in ("123", "1doubling", "two_op", "native"):
-        cfg = configs.get_smoke("qwen2_moe_a2_7b", exscan_algorithm=alg)
+    for alg in ("auto", "123", "1doubling", "two_op", "native"):
+        cfg = configs.get_smoke(
+            "qwen2_moe_a2_7b",
+            scan=ScanSpec(kind="exclusive", algorithm=alg))
         model = Model(cfg, mesh)
         params = model.init_params(jax.random.PRNGKey(0))
         with jax.set_mesh(mesh):
@@ -44,7 +47,7 @@ def main():
               f"load_balance={float(aux[0]):.4f} "
               f"dropped={float(aux[1]):.4%}")
 
-    base = outs["123"]
+    base = outs["auto"]
     for alg, o in outs.items():
         np.testing.assert_allclose(o, base, rtol=1e-4, atol=1e-4)
     print("\nall algorithms produce identical MoE outputs "

@@ -1,8 +1,10 @@
-"""Quickstart: the paper's exclusive scan as a JAX collective.
+"""Quickstart: the paper's exclusive scan behind the planner API.
 
-Runs the three exclusive-scan algorithms from the paper (plus the
-all-gather baseline) on a fake 8-device mesh, checks they agree, and
-prints the round/⊕ counts from Theorem 1.
+Builds a ScanSpec, lets the planner pick the algorithm for the payload
+("auto" — the cost model weighs rounds vs bytes vs ⊕ cost), inspects
+the resulting ScanPlan *before* tracing, then runs every registered
+algorithm on a fake 8-device mesh and checks the predicted round/⊕
+counts against trace-time measurements and Theorem 1.
 
     python examples/quickstart.py
 """
@@ -17,6 +19,8 @@ import sys  # noqa: E402
 sys.path.insert(0, os.path.join(os.path.dirname(
     os.path.dirname(os.path.abspath(__file__))), "src"))
 
+import repro  # noqa: E402,F401  (applies jax compat backfills)
+
 import jax  # noqa: E402
 import numpy as np  # noqa: E402
 from jax import shard_map  # noqa: E402
@@ -24,6 +28,7 @@ from jax.sharding import Mesh, PartitionSpec as P  # noqa: E402
 
 import repro.core.collectives as collectives  # noqa: E402
 from repro.core import oracle  # noqa: E402
+from repro.core.scan_api import ScanSpec, algorithms, plan, scan  # noqa: E402
 
 
 def main():
@@ -36,16 +41,37 @@ def main():
     expected = np.zeros_like(x)
     expected[1:] = np.cumsum(x[:-1], axis=0)
 
-    for alg in collectives.ALGORITHMS:
+    # --- the planner API: describe WHAT, let the cost model pick HOW ---
+    spec = ScanSpec(kind="exclusive", monoid="add", algorithm="auto",
+                    axis_name="ranks")
+    pl = plan(spec, p=p, nbytes=x[0].nbytes)  # inspectable, pre-tracing
+    print("auto plan for this payload:")
+    print(" ", pl.describe())
+    print("  (large payloads flip the choice: "
+          f"1MB -> {plan(spec, p=p, nbytes=1 << 20).algorithm})\n")
+
+    for alg in algorithms("exclusive") + ("auto",):
+        aspec = spec.over("ranks", algorithm=alg)
         with collectives.collect_stats() as stats:
             fn = jax.jit(shard_map(
-                lambda v: collectives.exscan(v, "ranks", "add", alg),
+                lambda v: scan(v, aspec),
                 mesh=mesh, in_specs=P("ranks"), out_specs=P("ranks")))
             out = np.asarray(fn(x))
         assert np.array_equal(out, expected), alg
+        apl = plan(aspec, p=p, nbytes=x[0].nbytes)
+        assert stats.rounds == apl.rounds  # plans predict measurements
         print(f"{alg:>10s}: rounds={stats.rounds} "
               f"⊕/device={stats.op_applications} "
-              f"(all-gathers={stats.allgathers})  ✓ correct")
+              f"(all-gathers={stats.allgathers})"
+              f"{'  <- planned: ' + apl.algorithm if alg == 'auto' else ''}"
+              f"  ✓ correct")
+
+    # --- the legacy string API still works (compatibility wrapper) ---
+    fn = jax.jit(shard_map(
+        lambda v: collectives.exscan(v, "ranks", "add", "123"),
+        mesh=mesh, in_specs=P("ranks"), out_specs=P("ranks")))
+    assert np.array_equal(np.asarray(fn(x)), expected)
+    print("\nlegacy collectives.exscan(x, axis, 'add', '123') ✓ still works")
 
     print("\nTheorem 1 at the paper's p=36 and at pod scale:")
     for p_ in (36, 256, 512):

@@ -1,0 +1,54 @@
+"""Forward-compatibility backfills for older pinned jax.
+
+The codebase is written against the current jax API (``jax.shard_map``,
+``jax.set_mesh``, ``lax.axis_size``, ``check_vma=``).  Some images pin
+an older jax (e.g. 0.4.37) where those names live under
+``jax.experimental.shard_map`` / ``with mesh:`` / ``lax.psum(1, axis)``.
+``apply()`` backfills the missing attributes in place — a no-op on
+current jax — so the same sources run on both.
+
+Imported from ``repro/__init__.py`` (covers anything that imports this
+package first) and from ``src/sitecustomize.py`` (covers subprocess
+snippets that do ``from jax import shard_map`` before importing repro,
+as the test helpers' fake-device subprocesses do).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import functools
+
+
+def apply() -> None:
+    import jax
+    from jax import lax
+
+    if not hasattr(lax, "axis_size"):
+        def axis_size(axis_name):
+            """Size of a named mesh axis (product over a tuple)."""
+            return lax.psum(1, axis_name)
+
+        lax.axis_size = axis_size
+
+    if not hasattr(jax, "shard_map"):
+        from jax.experimental.shard_map import shard_map as _shard_map
+
+        @functools.wraps(_shard_map)
+        def shard_map(f, mesh=None, in_specs=None, out_specs=None,
+                      *, check_vma=None, check_rep=None, **kwargs):
+            if check_rep is None:
+                check_rep = check_vma
+            if check_rep is not None:
+                kwargs["check_rep"] = check_rep
+            return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                              out_specs=out_specs, **kwargs)
+
+        jax.shard_map = shard_map
+
+    if not hasattr(jax, "set_mesh"):
+        @contextlib.contextmanager
+        def set_mesh(mesh):
+            with mesh:
+                yield mesh
+
+        jax.set_mesh = set_mesh

@@ -1,15 +1,25 @@
-"""SPMD exclusive/inclusive prefix-scan collectives for TPU meshes.
+"""SPMD prefix-scan collectives: implementations behind ``scan_api``.
 
-This is the paper's contribution adapted to JAX: each simultaneous
-send-receive communication round becomes one ``lax.ppermute`` along a
-named mesh axis (every device sends and receives at most one message per
-round — the paper's one-ported model).  Edge ranks, which in the MPI
-formulation conditionally skip sends/receives, are handled uniformly in
-SPMD via the monoid identity and masked combines; the masks are exactly
-the paper's loop conditions (``0 < f``, ``t < p``).
+Each simultaneous send-receive communication round of the paper becomes
+one ``lax.ppermute`` along a named mesh axis (every device sends and
+receives at most one message per round — the paper's one-ported model).
+Edge ranks, which in the MPI formulation conditionally skip
+sends/receives, are handled uniformly in SPMD via the monoid identity
+and masked combines; the masks are exactly the paper's loop conditions
+(``0 < f``, ``t < p``).
 
-Algorithms (selectable, all returning the exclusive prefix under a
-:class:`repro.core.monoid.Monoid`; rank 0 receives the identity):
+The preferred entry point is the planner API::
+
+    from repro.core.scan_api import ScanSpec, scan, plan
+
+    spec = ScanSpec(kind="exclusive", monoid="add", algorithm="auto")
+    y = scan(x, spec.over("data"))        # planner picks the algorithm
+    plan(spec, p=256, nbytes=64)          # inspect the choice first
+
+Every implementation below registers itself with
+``@register_algorithm(...)``, carrying its theoretical round/⊕/byte
+costs from :mod:`repro.core.oracle` so plans predict ``collect_stats``
+measurements exactly.  Registered exclusive-scan algorithms:
 
   * ``"123"``        — the paper's new 123-doubling algorithm
                        (Algorithm 1): q = ceil(log2(p-1)+log2(4/3))
@@ -20,8 +30,13 @@ Algorithms (selectable, all returning the exclusive prefix under a
                        2*ceil(log2 p)-1 ⊕.
   * ``"native"``     — all-gather + local fold (what a library would do
                        without the paper; XLA-native collective).
-  * ``"ring"``       — p-1 neighbour rounds (bandwidth-optimal pipelined
-                       baseline for large m; see DESIGN.md).
+  * ``"ring"``       — p-1 neighbour rounds (the pipelined/fixed-degree
+                       baseline the paper cites for large m; see
+                       DESIGN.md §7).
+
+The legacy string API is kept as thin compatibility wrappers over
+``scan_api``: ``exscan(x, axis, m, algorithm)``,
+``inclusive_scan(x, axis, m)`` and ``allreduce(x, axis, m)``.
 
 All functions must be called inside ``shard_map`` (or any context where
 ``axis_name`` is bound).  Inputs may be arbitrary pytrees; the monoid
@@ -32,8 +47,8 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
+import math
 import threading
-from typing import Any, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -41,6 +56,8 @@ from jax import lax
 
 from repro.core import monoid as monoid_lib
 from repro.core import oracle
+from repro.core import scan_api
+from repro.core.scan_api import ScanSpec, register_algorithm, scan
 
 
 # ---------------------------------------------------------------------------
@@ -88,10 +105,12 @@ def _record_round(tree):
         s.bytes_per_round.append(_nbytes(tree))
 
 
-def _record_op():
+def _record_op(n: int = 1):
+    """Count n ⊕ *executions* (a traced-once loop body records its trip
+    count, so stats mean executions, not trace sites)."""
     s = _stats()
     if s is not None:
-        s.op_applications += 1
+        s.op_applications += n
 
 
 def _record_allgather():
@@ -136,11 +155,68 @@ def _fixup_identity(m: monoid_lib.Monoid, recv, has_src):
     )
 
 
+def _doubling_phase(w, axis_name: str, m: monoid_lib.Monoid, r, p: int,
+                    skips, strict: bool = True):
+    """The doubling loop shared by 123-doubling, 1-doubling and the
+    Hillis-Steele inclusive scan: for each skip s, W ← W_{r-s} ⊕ W on
+    ranks where the window still reaches below 0 (mask ``r > s``, or
+    ``r >= s`` for the inclusive scan where W covers the rank itself).
+    """
+    for s in skips:
+        recv = _shift_up(w, axis_name, s, p)
+        has = r > s if strict else r >= s
+        w = _masked_combine(m, _fixup_identity(m, recv, has), w, has)
+    return w
+
+
+# ---------------------------------------------------------------------------
+# Predicted-cost functions for the registry (see scan_api.ScanAlgorithm:
+# these must match collect_stats() measurements of the traced programs —
+# tests/test_scan_api.py asserts this for every p in 2..17).
+# ---------------------------------------------------------------------------
+
+
+def _ops_123(p: int) -> int:
+    # round 1 records a send-side prep + a combine, each later round one
+    # combine: 2 + (rounds - 2) = rounds (p >= 3).
+    return 0 if p <= 2 else oracle.q_123(p)
+
+
+def _ops_1doubling(p: int) -> int:
+    return max(0, oracle.rounds_1doubling(p) - 1)
+
+
+def _ops_two_op(p: int) -> int:
+    return 2 * max(0, oracle.rounds_two_op(p) - 1)
+
+
+def _rounds_inclusive(p: int) -> int:
+    return 0 if p <= 1 else math.ceil(math.log2(p))
+
+
+def _rounds_butterfly(p: int) -> int:
+    return 0 if p <= 1 else math.ceil(math.log2(p))
+
+
+def _ops_butterfly(p: int) -> int:
+    if p <= 1:
+        return 0
+    if p & (p - 1):  # non-power-of-two: inclusive scan + broadcast
+        return _rounds_inclusive(p)
+    return 2 * _rounds_butterfly(p)
+
+
+def _ag_butterfly(p: int) -> int:
+    return 1 if p > 1 and (p & (p - 1)) else 0
+
+
 # ---------------------------------------------------------------------------
 # The paper's algorithms
 # ---------------------------------------------------------------------------
 
 
+@register_algorithm(
+    "123", kind="exclusive", rounds=oracle.q_123, ops=_ops_123)
 def exscan_123(x, axis_name: str, m: monoid_lib.Monoid):
     """Algorithm 1 (123-doubling) as q ppermute rounds.
 
@@ -168,17 +244,12 @@ def exscan_123(x, axis_name: str, m: monoid_lib.Monoid):
     w = _masked_combine(m, _fixup_identity(m, recv, r >= 2), w, r >= 2)
 
     # Rounds k >= 2 (skip 3*2^(k-2)): plain doubling on W.
-    k = 2
-    while True:
-        s = 3 * (1 << (k - 2))
-        if s >= p - 1:
-            break
-        recv = _shift_up(w, axis_name, s, p)
-        w = _masked_combine(m, _fixup_identity(m, recv, r > s), w, r > s)
-        k += 1
-    return w
+    return _doubling_phase(w, axis_name, m, r, p, oracle.skips_123(p)[2:])
 
 
+@register_algorithm(
+    "1doubling", kind="exclusive", rounds=oracle.rounds_1doubling,
+    ops=_ops_1doubling)
 def exscan_1doubling(x, axis_name: str, m: monoid_lib.Monoid):
     """Shift + straight doubling: 1 + ceil(log2(p-1)) rounds."""
     p = _axis_size(axis_name)
@@ -188,18 +259,13 @@ def exscan_1doubling(x, axis_name: str, m: monoid_lib.Monoid):
 
     recv = _shift_up(x, axis_name, 1, p)
     w = _fixup_identity(m, recv, r >= 1)
-
-    k = 1
-    while True:
-        s = 1 << (k - 1)
-        if s >= p - 1:
-            break
-        recv = _shift_up(w, axis_name, s, p)
-        w = _masked_combine(m, _fixup_identity(m, recv, r > s), w, r > s)
-        k += 1
-    return w
+    return _doubling_phase(w, axis_name, m, r, p,
+                           oracle.skips_1doubling(p)[1:])
 
 
+@register_algorithm(
+    "two_op", kind="exclusive", rounds=oracle.rounds_two_op,
+    ops=_ops_two_op)
 def exscan_two_op(x, axis_name: str, m: monoid_lib.Monoid):
     """Two-⊕ doubling: ceil(log2 p) rounds, two ⊕ per round after the first."""
     p = _axis_size(axis_name)
@@ -221,6 +287,12 @@ def exscan_two_op(x, axis_name: str, m: monoid_lib.Monoid):
     return w
 
 
+@register_algorithm(
+    "native", kind="exclusive", rounds=lambda p: 0,
+    ops=lambda p: max(0, p - 1),
+    allgathers=lambda p: 0 if p <= 1 else 1,
+    latency_hops=lambda p: max(0, p - 1),  # ring all-gather on tori
+    wire_bytes=lambda p, m: p * m if p > 1 else 0)
 def exscan_native(x, axis_name: str, m: monoid_lib.Monoid):
     """Baseline: all-gather everyone's V, fold locally below own rank.
 
@@ -245,9 +317,21 @@ def exscan_native(x, axis_name: str, m: monoid_lib.Monoid):
             lambda c, a: jnp.where(take, c, a), combined, acc
         )
 
+    _record_op(p - 1)  # the fori_loop body executes p-1 times
     return lax.fori_loop(0, p - 1, body, ident)
 
 
+@register_algorithm(
+    "ring", kind="exclusive", rounds=lambda p: max(0, p - 1),
+    ops=lambda p: max(0, p - 2),
+    # serial_bytes prices the PIPELINED ring of the paper's large-m
+    # citation (segments overlap the p-1 neighbour rounds -> ~2m on the
+    # bandwidth critical path).  The SPMD program below is an
+    # UNPIPELINED stand-in — full m bytes per round, (p-1)·m serialized
+    # (= wire_bytes) — so treat "auto" picking ring as "a pipelined
+    # fixed-degree algorithm belongs here"; see DESIGN.md §7 and the
+    # ROADMAP item on payload-segmented rings.
+    serial_bytes=lambda p, m: 2 * m if p > 1 else 0)
 def exscan_ring(x, axis_name: str, m: monoid_lib.Monoid):
     """p-1 neighbour rounds; latency-poor but each round is 1 hop.
 
@@ -272,77 +356,27 @@ def exscan_ring(x, axis_name: str, m: monoid_lib.Monoid):
     return acc
 
 
-_ALGORITHMS = {
-    "123": exscan_123,
-    "1doubling": exscan_1doubling,
-    "two_op": exscan_two_op,
-    "native": exscan_native,
-    "ring": exscan_ring,
-}
-
-ALGORITHMS = tuple(_ALGORITHMS)
-
-
-def exscan(x, axis_name, m="add", algorithm: str = "123"):
-    """Exclusive prefix scan along one or more named mesh axes.
-
-    Args:
-      x: pytree of arrays (the per-rank input vector V_r).
-      axis_name: a mesh axis name, or a tuple of axis names ordered
-        major→minor (e.g. ``("pod", "data")``); ranks are taken in
-        row-major order over the tuple, matching
-        ``lax.axis_index(axes)`` ordering.
-      m: a Monoid or registry name.
-      algorithm: one of ``ALGORITHMS``.
-
-    Returns:
-      The exclusive prefix ⊕_{i<r} V_i; rank 0 gets the identity.
-    """
-    m = monoid_lib.get(m)
-    if algorithm not in _ALGORITHMS:
-        raise ValueError(
-            f"unknown algorithm {algorithm!r}; known: {sorted(_ALGORITHMS)}"
-        )
-    fn = _ALGORITHMS[algorithm]
-    if isinstance(axis_name, (tuple, list)):
-        axes = tuple(axis_name)
-        if len(axes) == 1:
-            return fn(x, axes[0], m)
-        # Two-level composition: exscan within the minor axis, plus the
-        # exclusive prefix over major-axis *totals* (see DESIGN.md §5).
-        minor = axes[-1]
-        inner = fn(x, minor, m)
-        total = allreduce(x, minor, m)  # ⊕ of the whole minor group
-        outer = exscan(total, axes[:-1], m, algorithm)
-        combined = m.op(outer, inner)
-        _record_op()
-        return combined
-    return fn(x, axis_name, m)
-
-
-def inclusive_scan(x, axis_name: str, m="add"):
+@register_algorithm(
+    "hillis_steele", kind="inclusive", rounds=_rounds_inclusive,
+    ops=_rounds_inclusive)
+def _inclusive_hillis_steele(x, axis_name: str, m: monoid_lib.Monoid):
     """Hillis-Steele inclusive scan: ceil(log2 p) rounds, one ⊕ each."""
-    m = monoid_lib.get(m)
     p = _axis_size(axis_name)
     r = lax.axis_index(axis_name)
-    w = x
-    k = 0
-    while (1 << k) < p:
-        s = 1 << k
-        recv = _shift_up(w, axis_name, s, p)
-        w = _masked_combine(m, _fixup_identity(m, recv, r >= s), w, r >= s)
-        k += 1
-    return w
+    return _doubling_phase(x, axis_name, m, r, p,
+                           oracle.skips_two_op(p), strict=False)
 
 
-def allreduce(x, axis_name: str, m="add"):
+@register_algorithm(
+    "butterfly", kind="allreduce", rounds=_rounds_butterfly,
+    ops=_ops_butterfly, allgathers=_ag_butterfly)
+def _allreduce_butterfly(x, axis_name: str, m: monoid_lib.Monoid):
     """Recursive-doubling (butterfly) all-reduce under an arbitrary monoid.
 
     ceil(log2 p) rounds.  For non-commutative monoids the butterfly
     exchange pattern preserves rank order within each combine (lower
     block always on the left).
     """
-    m = monoid_lib.get(m)
     p = _axis_size(axis_name)
     if p == 1:
         return x
@@ -351,7 +385,7 @@ def allreduce(x, axis_name: str, m="add"):
     # For non-power-of-two p fall back to inclusive scan + broadcast of the
     # last rank's value (2*ceil(log2 p) rounds worst case, still log).
     if p & (p - 1):
-        incl = inclusive_scan(x, axis_name, m)
+        incl = _inclusive_hillis_steele(x, axis_name, m)
         # broadcast rank p-1's inclusive value to everyone
         _record_allgather()
         return jax.tree.map(
@@ -360,15 +394,13 @@ def allreduce(x, axis_name: str, m="add"):
     k = 0
     while (1 << k) < p:
         s = 1 << k
-        partner = r ^ s
         perm = [(i, i ^ s) for i in range(p)]
         _record_round(w)
         recv = jax.tree.map(lambda t: lax.ppermute(t, axis_name, perm), w)
         low_side = (r & s) != 0  # partner is the lower block
         combined_lo = m.op(recv, w)  # partner low, self high
         combined_hi = m.op(w, recv)  # self low, partner high
-        _record_op()
-        _record_op()
+        _record_op(2)
         w = jax.tree.map(
             lambda lo, hi: jnp.where(low_side, lo, hi),
             combined_lo,
@@ -376,6 +408,52 @@ def allreduce(x, axis_name: str, m="add"):
         )
         k += 1
     return w
+
+
+# ---------------------------------------------------------------------------
+# Legacy string API — thin wrappers over scan_api (kept for
+# backward compatibility; new code should build a ScanSpec and call
+# scan_api.scan / scan_api.plan directly).
+# ---------------------------------------------------------------------------
+
+ALGORITHMS = scan_api.algorithms("exclusive")
+
+
+def exscan(x, axis_name, m="add", algorithm: str = "123"):
+    """Exclusive prefix scan along one or more named mesh axes.
+
+    Compatibility wrapper: equivalent to
+    ``scan(x, ScanSpec(kind="exclusive", monoid=m, algorithm=algorithm,
+    axis_name=axis_name))``.
+
+    Args:
+      x: pytree of arrays (the per-rank input vector V_r).
+      axis_name: a mesh axis name, or a tuple of axis names ordered
+        major→minor (e.g. ``("pod", "data")``); ranks are taken in
+        row-major order over the tuple, matching
+        ``lax.axis_index(axes)`` ordering.
+      m: a Monoid or registry name.
+      algorithm: one of ``ALGORITHMS``, or ``"auto"`` for cost-model
+        selection.
+
+    Returns:
+      The exclusive prefix ⊕_{i<r} V_i; rank 0 gets the identity.
+    """
+    return scan(x, ScanSpec(kind="exclusive", monoid=monoid_lib.get(m),
+                            algorithm=algorithm, axis_name=axis_name))
+
+
+def inclusive_scan(x, axis_name: str, m="add"):
+    """Hillis-Steele inclusive scan: ceil(log2 p) rounds, one ⊕ each."""
+    return scan(x, ScanSpec(kind="inclusive", monoid=monoid_lib.get(m),
+                            algorithm="hillis_steele",
+                            axis_name=axis_name))
+
+
+def allreduce(x, axis_name: str, m="add"):
+    """Butterfly all-reduce under an arbitrary monoid (rank-ordered)."""
+    return scan(x, ScanSpec(kind="allreduce", monoid=monoid_lib.get(m),
+                            algorithm="butterfly", axis_name=axis_name))
 
 
 # ---------------------------------------------------------------------------
@@ -388,14 +466,12 @@ rounds_two_op = oracle.rounds_two_op
 
 
 def expected_rounds(algorithm: str, p: int) -> int:
-    if algorithm == "123":
-        return oracle.q_123(p)
-    if algorithm == "1doubling":
-        return oracle.rounds_1doubling(p)
-    if algorithm == "two_op":
-        return oracle.rounds_two_op(p)
-    if algorithm == "ring":
-        return max(0, p - 1)
+    """ppermute rounds of an exclusive algorithm, from the registry.
+
+    Legacy exception: ``"native"`` reports 1 (its single all-gather)
+    rather than the registry's 0 ppermutes, preserving the historical
+    convention of this helper.
+    """
     if algorithm == "native":
-        return 1  # one all-gather (but p·m bytes)
-    raise ValueError(algorithm)
+        return 1  # one all-gather (but p·m bytes), zero ppermutes
+    return scan_api.get_algorithm("exclusive", algorithm).rounds(p)

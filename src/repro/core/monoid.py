@@ -33,12 +33,17 @@ class Monoid:
       identity_like: maps a pytree of arrays to the identity element of
         the same structure/shape/dtype.
       commutative: informational only (enables extra test oracles).
+      op_cost: relative cost of one ⊕ application per payload byte
+        (1.0 = elementwise add).  Feeds the γ term of the scan planner's
+        cost model (scan_api.CostModel) — "expensive" operators push the
+        planner toward ⊕-frugal algorithms like 123-doubling.
     """
 
     name: str
     op: Callable[[Any, Any], Any]
     identity_like: Callable[[Any], Any]
     commutative: bool = False
+    op_cost: float = 1.0
 
     def fold(self, items):
         """Left fold; returns identity_like(items[0]) for empty input."""
@@ -147,6 +152,7 @@ AFFINE = Monoid(
     op=_affine_op,
     identity_like=_affine_identity,
     commutative=False,
+    op_cost=2.0,  # 3 mul + 1 add over two leaves vs one add
 )
 
 
@@ -169,6 +175,7 @@ MATMUL = Monoid(
     op=_matmul_op,
     identity_like=_matmul_identity,
     commutative=False,
+    op_cost=8.0,  # O(n) MACs per output element, nominal n=8 state
 )
 
 

@@ -1,0 +1,471 @@
+"""Unified scan API: ``ScanSpec`` in, ``ScanPlan`` out, one ``scan()``.
+
+The paper's central observation is that the *right* prefix-scan
+algorithm depends on the regime: for small payloads the round count
+dominates (123-doubling's q = ceil(log2(p-1)+log2(4/3)) rounds win),
+while for large payloads bandwidth dominates and pipelined/ring or
+all-gather approaches win.  Instead of hardwiring ``algorithm="123"``
+strings at every call site, callers describe *what* they need with a
+:class:`ScanSpec` and the planner decides *how*:
+
+    spec = ScanSpec(kind="exclusive", axis_name="data", monoid="add",
+                    algorithm="auto")
+    y = scan(x, spec)                  # inside shard_map
+
+    pl = plan(spec, p=256, nbytes=64)  # inspectable, before any tracing
+    pl.algorithm, pl.rounds, pl.op_applications, pl.bytes_on_wire
+
+Algorithm implementations (in :mod:`repro.core.collectives`) register
+themselves with :func:`register_algorithm`, carrying their theoretical
+round/⊕/byte costs from :mod:`repro.core.oracle`, so a ``ScanPlan``
+predicts the exact ``collect_stats()`` measurements of the traced
+program — a property the test suite asserts for every registered
+algorithm.
+
+``algorithm="auto"`` minimizes the α·rounds + β·bytes + γ·ops model of
+:class:`CostModel` (per-axis interconnect tiers via ``launch.mesh
+.axis_cost_model``; see DESIGN.md §7 for the model table).  Plans are
+cached by (axis sizes, kind, monoid, payload signature, cost model).
+Multi-axis scans (e.g. ``("pod", "data")``) are rewritten by the
+planner into sub-plans: exscan over the minor axis, allreduce of the
+minor-axis total, exscan of the totals over the major axes, plus one
+combining ⊕ (DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import functools
+import math
+import threading
+from typing import Any, Callable
+
+import numpy as np
+
+from repro.core import monoid as monoid_lib
+
+
+# ---------------------------------------------------------------------------
+# Cost model
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class CostModel:
+    """α-β-γ communication cost model for algorithm selection.
+
+    ``cost = alpha * latency_hops + beta * serial_bytes
+           + gamma * op_applications * payload_bytes * monoid.op_cost``
+
+    alpha: seconds per one-ported send-receive hop (ppermute launch +
+      link traversal).  An all-gather counts as its internal hop count
+      (ring-based on torus interconnects: p-1 hops).
+    beta: seconds per byte on the bandwidth-critical path.
+    gamma: seconds per byte touched by one ⊕ application (HBM streaming
+      of the two operands), scaled by the monoid's relative op cost.
+    """
+
+    alpha: float = 1e-6  # ICI launch+hop latency
+    beta: float = 1.0 / 50e9  # ICI link bandwidth
+    gamma: float = 2.0 / 819e9  # HBM streaming for one ⊕
+
+    def cost(self, *, hops: int, serial_bytes: float, ops: int,
+             payload_bytes: int, op_cost: float = 1.0) -> float:
+        return (self.alpha * hops
+                + self.beta * serial_bytes
+                + self.gamma * ops * payload_bytes * op_cost)
+
+
+DEFAULT_COST_MODEL = CostModel()
+
+_tls = threading.local()
+
+
+@contextlib.contextmanager
+def use_cost_model(cm):
+    """Install ``cm`` as the default cost model for ``scan``/``plan``
+    calls inside the context.  ``cm`` is either a :class:`CostModel` or
+    a callable ``axis_name -> CostModel`` so multi-axis plans can price
+    each sub-axis by its own interconnect tier (e.g.
+    ``launch.mesh.axis_cost_model``: DCI for "pod", ICI otherwise)."""
+    prev = getattr(_tls, "cost_model", None)
+    _tls.cost_model = cm
+    try:
+        yield cm
+    finally:
+        _tls.cost_model = prev
+
+
+def current_cost_model():
+    return getattr(_tls, "cost_model", None) or DEFAULT_COST_MODEL
+
+
+def _resolve_cm(cm, axis_name) -> CostModel:
+    return cm(axis_name) if callable(cm) else cm
+
+
+# ---------------------------------------------------------------------------
+# Algorithm registry
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ScanAlgorithm:
+    """A registered scan implementation plus its theoretical costs.
+
+    The count functions take the axis size ``p`` and must predict the
+    ``collect_stats()`` measurements of the traced implementation
+    exactly (tests enforce this for p in 2..17):
+
+      rounds:          ppermute communication rounds.
+      op_applications: per-device ⊕ executions.
+      allgathers:      XLA-native all-gather calls.
+
+    The byte/latency functions feed the cost model only:
+
+      latency_hops(p):        one-ported hops on the critical path
+                              (defaults to rounds + (p-1)·allgathers —
+                              all-gathers are ring-based on tori).
+      wire_bytes(p, m):       total bytes through each device's port
+                              (defaults to rounds·m + allgathers·p·m).
+      serial_bytes(p, m):     bandwidth-critical-path bytes; pipelined
+                              algorithms get credit here (defaults to
+                              wire_bytes).
+    """
+
+    name: str
+    kind: str  # "exclusive" | "inclusive" | "allreduce"
+    fn: Callable[[Any, str, monoid_lib.Monoid], Any]
+    rounds: Callable[[int], int]
+    op_applications: Callable[[int], int]
+    allgathers: Callable[[int], int]
+    latency_hops: Callable[[int], int]
+    wire_bytes: Callable[[int, int], float]
+    serial_bytes: Callable[[int, int], float]
+
+
+_REGISTRY: dict[tuple[str, str], ScanAlgorithm] = {}
+
+KINDS = ("exclusive", "inclusive", "allreduce")
+
+
+def register_algorithm(name: str, *, kind: str,
+                       rounds: Callable[[int], int],
+                       ops: Callable[[int], int],
+                       allgathers: Callable[[int], int] | None = None,
+                       latency_hops: Callable[[int], int] | None = None,
+                       wire_bytes: Callable[[int, int], float] | None = None,
+                       serial_bytes: Callable[[int, int], float] | None = None):
+    """Class decorator registering a scan implementation with its costs.
+
+    Usage (collectives.py)::
+
+        @register_algorithm("123", kind="exclusive", rounds=oracle.q_123,
+                            ops=lambda p: 0 if p <= 2 else oracle.q_123(p))
+        def exscan_123(x, axis_name, m): ...
+    """
+    if kind not in KINDS:
+        raise ValueError(f"kind must be one of {KINDS}, got {kind!r}")
+    ag = allgathers or (lambda p: 0)
+    hops = latency_hops or (lambda p: rounds(p) + (p - 1) * ag(p))
+    wire = wire_bytes or (lambda p, m: rounds(p) * m + ag(p) * p * m)
+    serial = serial_bytes or wire
+
+    def deco(fn):
+        key = (kind, name)
+        if key in _REGISTRY:
+            raise ValueError(f"algorithm {name!r} already registered "
+                             f"for kind {kind!r}")
+        _REGISTRY[key] = ScanAlgorithm(
+            name=name, kind=kind, fn=fn, rounds=rounds,
+            op_applications=ops, allgathers=ag, latency_hops=hops,
+            wire_bytes=wire, serial_bytes=serial)
+        return fn
+
+    return deco
+
+
+def _ensure_registered():
+    # Implementations live in collectives.py and register on import;
+    # imported lazily here to avoid a module cycle.
+    if not _REGISTRY:
+        from repro.core import collectives  # noqa: F401
+
+
+def algorithms(kind: str | None = None) -> tuple[str, ...]:
+    """Registered algorithm names (optionally for one kind)."""
+    _ensure_registered()
+    return tuple(sorted(n for k, n in _REGISTRY
+                        if kind is None or k == kind))
+
+
+def get_algorithm(kind: str, name: str) -> ScanAlgorithm:
+    _ensure_registered()
+    try:
+        return _REGISTRY[(kind, name)]
+    except KeyError:
+        raise ValueError(
+            f"unknown {kind} scan algorithm {name!r}; "
+            f"known: {algorithms(kind)}") from None
+
+
+# ---------------------------------------------------------------------------
+# ScanSpec
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ScanSpec:
+    """Declarative description of a scan collective.
+
+    Attributes:
+      kind: "exclusive" | "inclusive" | "allreduce".
+      monoid: a :class:`repro.core.monoid.Monoid` or registry name.
+      algorithm: a registered algorithm name, or "auto" to let the
+        planner pick by cost model.
+      axis_name: mesh axis name, or tuple of names major→minor (ranks
+        row-major over the tuple).  May be None for pure planning math.
+      payload_bytes: per-rank message size hint m, used by ``plan``
+        when no concrete operand is available yet.
+    """
+
+    kind: str = "exclusive"
+    monoid: Any = "add"
+    algorithm: str = "auto"
+    axis_name: Any = None
+    payload_bytes: int | None = None
+
+    def __post_init__(self):
+        if self.kind not in KINDS:
+            raise ValueError(f"kind must be one of {KINDS}, "
+                             f"got {self.kind!r}")
+        if isinstance(self.axis_name, list):
+            object.__setattr__(self, "axis_name", tuple(self.axis_name))
+
+    @property
+    def axes(self) -> tuple:
+        """Axis names as a tuple (a single placeholder if unset)."""
+        if self.axis_name is None:
+            return (None,)
+        if isinstance(self.axis_name, tuple):
+            return self.axis_name
+        return (self.axis_name,)
+
+    def over(self, axis_name, **replacements) -> "ScanSpec":
+        """This spec re-targeted at ``axis_name`` (e.g. per call site),
+        with optional field overrides: ``spec.over("data",
+        monoid="affine")``."""
+        if isinstance(axis_name, list):
+            axis_name = tuple(axis_name)
+        return dataclasses.replace(self, axis_name=axis_name,
+                                   **replacements)
+
+
+# ---------------------------------------------------------------------------
+# ScanPlan
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ScanPlan:
+    """A resolved scan: algorithm choice + predicted costs, pre-tracing.
+
+    ``rounds``/``op_applications``/``allgathers`` predict exactly what
+    ``collectives.collect_stats()`` measures when the plan is executed.
+    ``bytes_on_wire`` is the total bytes through each device's port for
+    the planned payload.  Multi-axis scans carry ``sub_plans``
+    (inner exscan, minor-axis allreduce, outer exscan) and one extra
+    combining ⊕ at the top level.
+    """
+
+    spec: ScanSpec
+    p: int  # total ranks (product over axes)
+    algorithm: str  # resolved (never "auto")
+    payload_bytes: int
+    rounds: int
+    op_applications: int
+    allgathers: int
+    bytes_on_wire: float
+    cost: float  # cost-model seconds estimate
+    cost_model: CostModel
+    sub_plans: tuple = ()
+
+    def describe(self) -> str:
+        """Human-readable one-liner (benchmarks print these)."""
+        head = (f"{self.spec.kind} scan over p={self.p} "
+                f"[{self.algorithm}] rounds={self.rounds} "
+                f"ops={self.op_applications} "
+                f"allgathers={self.allgathers} "
+                f"wire={self.bytes_on_wire:.0f}B "
+                f"cost={self.cost * 1e6:.2f}us")
+        for sp in self.sub_plans:
+            head += "\n  " + sp.describe().replace("\n", "\n  ")
+        return head
+
+
+def _monoid_name_and_cost(monoid) -> tuple[str, float]:
+    m = monoid_lib.get(monoid)
+    return m.name, getattr(m, "op_cost", 1.0)
+
+
+def _plan_single(spec: ScanSpec, p: int, nbytes: int, cm) -> ScanPlan:
+    """Plan one axis: resolve "auto" by cost, fill predicted counts."""
+    cm = _resolve_cm(cm, spec.axes[-1])
+    _, op_cost = _monoid_name_and_cost(spec.monoid)
+
+    def one(algo: ScanAlgorithm) -> ScanPlan:
+        return ScanPlan(
+            spec=spec, p=p, algorithm=algo.name, payload_bytes=nbytes,
+            rounds=algo.rounds(p), op_applications=algo.op_applications(p),
+            allgathers=algo.allgathers(p),
+            bytes_on_wire=algo.wire_bytes(p, nbytes),
+            cost=cm.cost(hops=algo.latency_hops(p),
+                         serial_bytes=algo.serial_bytes(p, nbytes),
+                         ops=algo.op_applications(p),
+                         payload_bytes=nbytes, op_cost=op_cost),
+            cost_model=cm)
+
+    if spec.algorithm != "auto":
+        return one(get_algorithm(spec.kind, spec.algorithm))
+    _ensure_registered()
+    candidates = [a for (k, _), a in sorted(_REGISTRY.items())
+                  if k == spec.kind]
+    if not candidates:
+        raise ValueError(f"no algorithms registered for {spec.kind!r}")
+    # deterministic tie-break: lowest cost, then fewest rounds, name
+    plans = [one(a) for a in candidates]
+    return min(plans, key=lambda pl: (pl.cost, pl.rounds, pl.algorithm))
+
+
+@functools.lru_cache(maxsize=1024)
+def _plan_cached(spec: ScanSpec, ps: tuple, nbytes: int, cm) -> ScanPlan:
+    if len(ps) == 1:
+        return _plan_single(spec, ps[0], nbytes, cm)
+    # Multi-axis rewrite (DESIGN.md §5): exscan within the minor axis,
+    # allreduce of the minor-axis total, exscan of totals over the
+    # major axes, then one ⊕ combining outer and inner.
+    if spec.kind != "exclusive":
+        raise ValueError(
+            f"multi-axis scan only supports kind='exclusive', "
+            f"got {spec.kind!r}")
+    _, op_cost = _monoid_name_and_cost(spec.monoid)
+    axes = spec.axes
+    inner = _plan_cached(
+        spec.over(axes[-1]), (ps[-1],), nbytes, cm)
+    reduce_ = _plan_cached(
+        spec.over(axes[-1], kind="allreduce", algorithm="auto"),
+        (ps[-1],), nbytes, cm)
+    outer = _plan_cached(
+        spec.over(axes[:-1] if len(axes) > 2 else axes[0]),
+        ps[:-1], nbytes, cm)
+    subs = (inner, reduce_, outer)
+    cm_top = _resolve_cm(cm, axes[-1])  # final ⊕ is local compute
+    return ScanPlan(
+        spec=spec, p=int(np.prod(ps)),
+        algorithm=inner.algorithm, payload_bytes=nbytes,
+        rounds=sum(s.rounds for s in subs),
+        op_applications=sum(s.op_applications for s in subs) + 1,
+        allgathers=sum(s.allgathers for s in subs),
+        bytes_on_wire=sum(s.bytes_on_wire for s in subs),
+        cost=sum(s.cost for s in subs) + cm_top.gamma * nbytes * op_cost,
+        cost_model=cm_top, sub_plans=subs)
+
+
+def plan(spec: ScanSpec, p: int | tuple | None = None, *,
+         nbytes: int | None = None,
+         cost_model=None) -> ScanPlan:
+    """Resolve ``spec`` into an inspectable :class:`ScanPlan`.
+
+    Args:
+      spec: what to compute.
+      p: axis size, or tuple of sizes matching ``spec.axes`` for a
+        multi-axis scan (major→minor).
+      nbytes: per-rank payload size in bytes (falls back to
+        ``spec.payload_bytes``, then 0 — a pure round-count plan).
+      cost_model: overrides the ambient :func:`current_cost_model`; a
+        :class:`CostModel` or a per-axis ``axis_name -> CostModel``
+        callable (must be a stable module-level function — it is part
+        of the plan-cache key by identity).
+
+    Plans are cached by (spec, axis sizes, payload bytes, cost model);
+    repeated calls with the same signature return the same object.
+    """
+    if p is None:
+        raise ValueError("plan() needs the axis size(s) p")
+    ps = tuple(p) if isinstance(p, (tuple, list)) else (int(p),)
+    if len(ps) != len(spec.axes):
+        raise ValueError(
+            f"got {len(ps)} axis sizes for {len(spec.axes)} axes "
+            f"({spec.axes})")
+    m_bytes = nbytes if nbytes is not None else (spec.payload_bytes or 0)
+    cm = cost_model or current_cost_model()
+    return _plan_cached(spec, ps, int(m_bytes), cm)
+
+
+def plan_cache_clear():
+    _plan_cached.cache_clear()
+
+
+# ---------------------------------------------------------------------------
+# scan(): execute a spec inside shard_map
+# ---------------------------------------------------------------------------
+
+
+def _tree_nbytes(tree) -> int:
+    import jax
+
+    return sum(int(np.prod(x.shape)) * x.dtype.itemsize
+               for x in jax.tree.leaves(tree))
+
+
+def _run_plan(pl: ScanPlan, x, m: monoid_lib.Monoid):
+    if pl.sub_plans:
+        from repro.core import collectives
+
+        inner_pl, reduce_pl, outer_pl = pl.sub_plans
+        inner = _run_plan(inner_pl, x, m)
+        total = _run_plan(reduce_pl, x, m)
+        outer = _run_plan(outer_pl, total, m)
+        combined = m.op(outer, inner)
+        collectives._record_op()
+        return combined
+    algo = get_algorithm(pl.spec.kind, pl.algorithm)
+    axis = pl.spec.axes[-1] if len(pl.spec.axes) == 1 else pl.spec.axes
+    return algo.fn(x, axis, m)
+
+
+def scan(x, spec: ScanSpec, *, cost_model=None):
+    """Execute ``spec`` on pytree ``x`` along its named mesh axes.
+
+    Must be called inside ``shard_map`` (or wherever the axis names are
+    bound).  Resolves a :class:`ScanPlan` first — with the payload size
+    taken from ``x`` itself — then runs it; ``algorithm="auto"`` specs
+    therefore adapt per call site to the actual message size.
+    """
+    _ensure_registered()
+    from jax import lax
+
+    if spec.axis_name is None:
+        raise ValueError("scan() needs spec.axis_name to be set "
+                         "(use spec.over(axis_name))")
+    m = monoid_lib.get(spec.monoid)
+    ps = tuple(lax.axis_size(a) for a in spec.axes)
+    pl = plan(spec, ps if len(ps) > 1 else ps[0],
+              nbytes=_tree_nbytes(x), cost_model=cost_model)
+    return _run_plan(pl, x, m)
+
+
+# ---------------------------------------------------------------------------
+# Host-side twin
+# ---------------------------------------------------------------------------
+
+
+def host_exscan(lengths: np.ndarray) -> np.ndarray:
+    """Numpy twin of the exclusive scan for host-side code (the data
+    pipeline's document offsets): out[r] = sum(lengths[:r]), out[0]=0."""
+    lengths = np.asarray(lengths)
+    out = np.zeros_like(lengths)
+    if lengths.shape[0] > 1:
+        np.cumsum(lengths[:-1], axis=0, out=out[1:])
+    return out

@@ -6,9 +6,10 @@ elastic re-sharding (different host count) keeps the global stream
 stable.
 
 Packing: variable-length documents are packed into fixed (B, S) windows;
-the *global* document offsets across hosts are an exclusive prefix sum
-of per-host token counts — computed with the paper's exscan when run
-under a mesh (multi-host), or its numpy twin on the host side.
+document offsets are exclusive prefix sums of lengths, computed with
+``scan_api.host_exscan`` — the numpy twin of the device collective (a
+multi-host deployment would hand the same shape to ``scan_api.scan``
+under a mesh for global cross-host offsets).
 """
 
 from __future__ import annotations
@@ -16,6 +17,8 @@ from __future__ import annotations
 import dataclasses
 
 import numpy as np
+
+from repro.core.scan_api import host_exscan
 
 
 @dataclasses.dataclass(frozen=True)
@@ -70,12 +73,11 @@ class SyntheticLM:
 
         Offsets of each document in the flat stream are the exclusive
         prefix sums of document lengths (kernels/ops.exscan on device,
-        numpy here on the host path).
+        scan_api.host_exscan here on the host path).
         """
         cfg = self.cfg
         lengths = np.array([len(d) for d in docs], np.int64)
-        offsets = np.zeros_like(lengths)
-        np.cumsum(lengths[:-1], out=offsets[1:])  # host twin of exscan
+        offsets = host_exscan(lengths)
         need = self.local_batch * cfg.seq_len
         flat = np.zeros(need, np.int32)
         pos = np.zeros(need, np.int32)

@@ -30,9 +30,20 @@ import traceback  # noqa: E402
 import jax  # noqa: E402
 
 from repro import configs  # noqa: E402
+from repro.core import scan_api  # noqa: E402
+from repro.core.scan_api import ScanSpec  # noqa: E402
+from repro.launch import mesh as mesh_lib  # noqa: E402
 from repro.launch import roofline as rl  # noqa: E402
 from repro.launch import steps as steps_lib  # noqa: E402
 from repro.launch.mesh import make_production_mesh  # noqa: E402
+
+
+def _cost_analysis(compiled) -> dict:
+    """compiled.cost_analysis(), normalized: older jax returns [dict]."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost
 
 
 def _probe(cfg, shape, mesh, repeats: int):
@@ -45,8 +56,9 @@ def _probe(cfg, shape, mesh, repeats: int):
     unit = len(cfg.pattern())
     cfg_p = dataclasses.replace(cfg, n_layers=unit * repeats,
                                 unroll_stack=True)
-    compiled = steps_lib.lower_cell(cfg_p, shape, mesh).compile()
-    cost = compiled.cost_analysis()
+    with scan_api.use_cost_model(mesh_lib.axis_cost_model):
+        compiled = steps_lib.lower_cell(cfg_p, shape, mesh).compile()
+    cost = _cost_analysis(compiled)
     coll = rl.parse_collectives(compiled.as_text())
     return (float(cost.get("flops", 0.0)),
             float(cost.get("bytes accessed", 0.0)), coll)
@@ -90,7 +102,10 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
     mesh = make_production_mesh(multi_pod=multi_pod)
     n_dev = mesh.devices.size
     t0 = time.time()
-    lowered = steps_lib.lower_cell(cfg, shape, mesh)
+    # "auto" scan specs price each mesh axis by its interconnect tier
+    # (DCI for "pod" on the multi-pod mesh) while this cell traces
+    with scan_api.use_cost_model(mesh_lib.axis_cost_model):
+        lowered = steps_lib.lower_cell(cfg, shape, mesh)
     t_lower = time.time() - t0
     t0 = time.time()
     compiled = lowered.compile()
@@ -105,7 +120,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         p2 = _probe(cfg, shape, mesh, 2)
         flops, bytes_hbm, coll = _extrapolate(p1, p2, cfg.n_repeats)
     else:
-        cost = compiled.cost_analysis()
+        cost = _cost_analysis(compiled)
         flops = float(cost.get("flops", 0.0))
         bytes_hbm = float(cost.get("bytes accessed", 0.0))
         coll = rl.parse_collectives(compiled.as_text())
@@ -182,7 +197,8 @@ def main():
     ap.add_argument("--no-probes", action="store_true",
                     help="skip cost probes (compile-only pass)")
     ap.add_argument("--exscan", default=None,
-                    choices=["123", "1doubling", "two_op", "native"])
+                    choices=["auto", "123", "1doubling", "two_op",
+                             "native", "ring"])
     args = ap.parse_args()
 
     assert jax.device_count() == 512, (
@@ -207,7 +223,8 @@ def main():
                     **(({"remat": False} if args.no_remat else {})
                        | ({"remat_policy": args.remat_policy}
                           if args.remat_policy != "nothing" else {})
-                       | ({"exscan_algorithm": args.exscan}
+                       | ({"scan": ScanSpec(kind="exclusive",
+                                            algorithm=args.exscan)}
                           if args.exscan else {}))))
             except Exception as e:  # noqa: BLE001
                 failures += 1

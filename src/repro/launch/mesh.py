@@ -13,6 +13,27 @@ from __future__ import annotations
 
 import jax
 
+from repro.core.scan_api import CostModel
+
+# α-β-γ parameters per interconnect tier (see DESIGN.md §7): "pod"
+# collectives traverse DCI (higher launch latency, lower bandwidth)
+# while intra-pod axes ride ICI.
+ICI_COST = CostModel(alpha=1e-6, beta=1.0 / 50e9, gamma=2.0 / 819e9)
+DCI_COST = CostModel(alpha=10e-6, beta=1.0 / 12.5e9, gamma=2.0 / 819e9)
+
+
+def axis_cost_model(axis_name) -> CostModel:
+    """Per-axis cost tier: DCI for the cross-pod axis, ICI otherwise.
+
+    A stable module-level function, so it can be installed as the
+    ambient planner cost model (``scan_api.use_cost_model(
+    axis_cost_model)`` — train.py and dryrun.py do) and multi-axis
+    plans price each sub-axis by its own interconnect.
+    """
+    axes = (axis_name,) if isinstance(axis_name, str) else \
+        tuple(axis_name or ())
+    return DCI_COST if "pod" in axes else ICI_COST
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)

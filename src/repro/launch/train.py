@@ -9,7 +9,9 @@ Production features exercised here end-to-end:
   * async sharded checkpointing with atomic commit,
   * automatic resume from the latest committed checkpoint,
   * straggler/step-time telemetry with EWMA watchdog,
-  * selectable exscan algorithm for the MoE dispatch collective.
+  * planner-driven exscan for the MoE dispatch collective
+    (``--exscan auto`` cost-model selection by default; explicit
+    algorithms remain selectable for A/B runs).
 """
 
 from __future__ import annotations
@@ -23,6 +25,8 @@ import numpy as np
 
 from repro import configs
 from repro.checkpoint.store import CheckpointStore
+from repro.core import scan_api
+from repro.core.scan_api import ScanSpec
 from repro.data.pipeline import DataConfig, SyntheticLM
 from repro.launch import mesh as mesh_lib
 from repro.launch.steps import make_train_step
@@ -67,13 +71,15 @@ def train(argv=None):
     ap.add_argument("--resume", default="auto", choices=["auto", "none"])
     ap.add_argument("--data-mesh", type=int, default=1)
     ap.add_argument("--model-mesh", type=int, default=1)
-    ap.add_argument("--exscan", default="123",
-                    choices=["123", "1doubling", "two_op", "native"])
+    ap.add_argument("--exscan", default="auto",
+                    choices=["auto", "123", "1doubling", "two_op",
+                             "native", "ring"])
     ap.add_argument("--log-every", type=int, default=10)
     args = ap.parse_args(argv)
 
     get = configs.get_smoke if args.smoke else configs.get
-    cfg = get(args.arch, exscan_algorithm=args.exscan)
+    cfg = get(args.arch, scan=ScanSpec(kind="exclusive",
+                                       algorithm=args.exscan))
     mesh = mesh_lib.make_host_mesh(args.data_mesh, args.model_mesh)
     model = Model(cfg, mesh)
 
@@ -101,7 +107,9 @@ def train(argv=None):
     rng = np.random.default_rng(1234)
     watchdog = StragglerWatchdog()
     losses = []
-    with jax.set_mesh(mesh):
+    # "auto" scan specs price each mesh axis by its interconnect tier
+    with scan_api.use_cost_model(mesh_lib.axis_cost_model), \
+            jax.set_mesh(mesh):
         for step in range(start_step, args.steps):
             batch = dict(data.batch(step))
             batch.pop("positions", None)

@@ -11,7 +11,10 @@ and the compiled program small.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Literal
+
+from repro.core.scan_api import ScanSpec
 
 Family = Literal["dense", "moe", "ssm", "hybrid", "vlm", "audio"]
 
@@ -64,7 +67,15 @@ class ModelConfig:
 
     # --- runtime ---
     dtype: str = "bfloat16"
-    exscan_algorithm: str = "123"
+    # Scan collective policy for every exscan site (MoE dispatch,
+    # context-parallel SSM/WKV carries, gradient compression): the
+    # planner resolves "auto" per call site from (p, payload bytes,
+    # monoid cost) — see core/scan_api.py and DESIGN.md §7.  Call sites
+    # read ``cfg.scan_spec`` and re-target it with ``.over(axes, ...)``.
+    scan: ScanSpec = ScanSpec(kind="exclusive", algorithm="auto")
+    # DEPRECATED: pre-planner string knob.  When set, overrides
+    # ``scan.algorithm`` (compatibility shim; use ``scan=ScanSpec(...)``).
+    exscan_algorithm: str | None = None
     capacity_factor: float = 1.25
     norm_eps: float = 1e-6
     tie_embeddings: bool = False
@@ -82,6 +93,19 @@ class ModelConfig:
     #   "fsdp_sp" — FSDP over all axes + sequence parallel over "model"
     #               (no per-layer TP activation reductions)
     sharding_strategy: str = "tp"
+
+    @property
+    def scan_spec(self) -> ScanSpec:
+        """The effective ScanSpec, honouring the deprecated
+        ``exscan_algorithm`` string override."""
+        if self.exscan_algorithm is not None:
+            warnings.warn(
+                "ModelConfig.exscan_algorithm is deprecated; pass "
+                "scan=ScanSpec(algorithm=...) instead",
+                DeprecationWarning, stacklevel=2)
+            return dataclasses.replace(
+                self.scan, algorithm=self.exscan_algorithm)
+        return self.scan
 
     @property
     def head_dim_(self) -> int:

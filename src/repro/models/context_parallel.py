@@ -14,19 +14,26 @@ This is the paper's headline scenario: m is small (one state vector),
 ⊕ is costly, and the number of communication rounds dominates — the
 123-doubling algorithm performs q = ceil(log2(p-1)+log2(4/3)) ppermute
 rounds with q-1 state compositions, vs 1+ceil(log2(p-1)) rounds for the
-shift-based scan and ~2 log2 p compositions for two-⊕ doubling.
+shift-based scan and ~2 log2 p compositions for two-⊕ doubling.  Both
+entry points take a :class:`~repro.core.scan_api.ScanSpec` (default
+``algorithm="auto"``: the planner weighs rounds against the AFFINE
+monoid's ⊕ cost and picks accordingly); the legacy ``algorithm=`` string
+kwarg is kept as a compatibility alias.
 """
 
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-from jax import lax
 from jax.sharding import PartitionSpec as P
 
-from repro.core import collectives
+from repro.core.scan_api import ScanSpec, scan
 from repro.models.mamba import ssm_scan_chunked
 from repro.models.rwkv import wkv_scan_chunked
+
+# Default policy for the chunk-summary carry: AFFINE state composition,
+# planner-selected algorithm.
+CARRY_SPEC = ScanSpec(kind="exclusive", monoid="affine", algorithm="auto")
 
 
 def _batch_spec(mesh, batch_sharded):
@@ -36,11 +43,23 @@ def _batch_spec(mesh, batch_sharded):
     return bt or None
 
 
+def _carry_spec(spec: ScanSpec | None, algorithm: str | None,
+                seq_axis: str) -> ScanSpec:
+    """Resolve the (spec, legacy algorithm kwarg) pair onto seq_axis."""
+    spec = spec if spec is not None else CARRY_SPEC
+    if algorithm is not None:  # legacy string path
+        spec = spec.over(seq_axis, algorithm=algorithm)
+    return spec.over(seq_axis, kind="exclusive", monoid="affine")
+
+
 def cp_ssm_scan(a, b, mesh, *, seq_axis: str = "data",
-                algorithm: str = "123", batch_sharded: bool = False):
+                spec: ScanSpec | None = None,
+                algorithm: str | None = None,
+                batch_sharded: bool = False):
     """Distributed h_t = a_t h_{t-1} + b_t with seq sharded over
     ``seq_axis``.  a, b: (B, S_global, ...) logically; returns h of the
     same shape.  Call under jit with ``mesh`` set."""
+    cspec = _carry_spec(spec, algorithm, seq_axis)
 
     def local(a_l, b_l):
         Bsz = a_l.shape[0]
@@ -51,8 +70,7 @@ def cp_ssm_scan(a, b, mesh, *, seq_axis: str = "data",
         a_tot = jnp.prod(a_l, axis=1)
         b_tot = hs[:, -1]
         # cross-device carry: the paper's collective, AFFINE monoid
-        _a_in, b_in = collectives.exscan(
-            (a_tot, b_tot), seq_axis, "affine", algorithm)
+        _a_in, b_in = scan((a_tot, b_tot), cspec)
         # carry entering this shard: global h0 = 0, so h_in = B-part
         h_in = b_in
         # correct local states:  h'_t = cum_a_t * h_in + h_t
@@ -71,20 +89,22 @@ def cp_ssm_scan(a, b, mesh, *, seq_axis: str = "data",
 
 
 def cp_wkv_scan(w, kv, mesh, *, seq_axis: str = "data",
-                algorithm: str = "123", batch_sharded: bool = False):
+                spec: ScanSpec | None = None,
+                algorithm: str | None = None,
+                batch_sharded: bool = False):
     """Distributed RWKV wkv state scan, sequence-sharded.
 
     w: (B, S, H, hd, 1) decays; kv: (B, S, H, hd, hd) outer products.
     Returns the *pre-update* state S_{t-1} per position (as rwkv_block
     consumes) for the full sequence."""
+    cspec = _carry_spec(spec, algorithm, seq_axis)
 
     def local(w_l, kv_l):
         Bsz = w_l.shape[0]
         s0 = jnp.zeros((Bsz, *kv_l.shape[2:]), kv_l.dtype)
         s_prev, s_final = wkv_scan_chunked(w_l, kv_l, s0)
         w_tot = jnp.prod(w_l, axis=1)
-        w_in, s_in = collectives.exscan(
-            (w_tot, s_final), seq_axis, "affine", algorithm)
+        w_in, s_in = scan((w_tot, s_final), cspec)
         # correct: S'_prev[t] = cumw_prev[t] * s_in + s_prev[t]
         cum_w = jnp.cumprod(w_l, axis=1)
         cum_w_prev = jnp.concatenate(

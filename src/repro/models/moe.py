@@ -10,11 +10,13 @@ devices) is under the expert's global capacity.  That global position is
 
     global_pos = exscan(per-device expert counts)[expert] + local_pos
 
-computed with the paper's 123-doubling exclusive scan over the data axes
-— a (num_experts,)-int vector per MoE layer per step: exactly the
-small-m, latency-dominated regime the paper targets.  The alternative
-algorithms stay selectable via ``cfg.exscan_algorithm`` so benchmarks
-can compare them in-situ.
+computed with the paper's exclusive scan over the data axes — a
+(num_experts,)-int vector per MoE layer per step: exactly the small-m,
+latency-dominated regime the paper targets, so the planner
+(``cfg.scan_spec``, default ``algorithm="auto"``) picks the
+round-optimal schedule for the axis size (123-doubling at the paper's
+scales); benchmarks pin explicit algorithms via
+``scan=ScanSpec(algorithm=...)`` to compare them in-situ.
 
 The per-slot position *within* a device is the Pallas moe_routing kernel
 on TPU and its pure-jnp oracle elsewhere (kernels/ops.py dispatches).
@@ -29,7 +31,7 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
-from repro.core import collectives
+from repro.core import scan_api
 from repro.kernels import ref as kref
 from repro.models import params as PD
 from repro.models.common import rmsnorm, swiglu
@@ -159,9 +161,9 @@ def moe_ffn(cfg, p, x, mesh):
 
         # ---- the paper's collective: global dispatch offsets ----
         if len(scan_axes) >= 1 and n_groups > 1:
-            offsets = collectives.exscan(
-                counts, scan_axes if len(scan_axes) > 1 else scan_axes[0],
-                "add", cfg.exscan_algorithm)
+            offsets = scan_api.scan(counts, cfg.scan_spec.over(
+                scan_axes if len(scan_axes) > 1 else scan_axes[0],
+                kind="exclusive", monoid="add"))
         else:
             offsets = jnp.zeros_like(counts)
 

@@ -68,8 +68,9 @@ def rwkv_block(cfg, p, x, *, cache=None, mesh=None):
 
     Under the fsdp_sp strategy (sequence sharded over "model") the wkv
     recurrence runs CONTEXT-PARALLEL: local chunk scans + the paper's
-    123-doubling exscan carrying the (decay, state) AFFINE monoid
-    across sequence shards (models/context_parallel.py)."""
+    exscan (``cfg.scan_spec``, planner-selected algorithm) carrying the
+    (decay, state) AFFINE monoid across sequence shards
+    (models/context_parallel.py)."""
     B, S, d = x.shape
     hd = HEAD_DIM
     H = d // hd
@@ -118,7 +119,7 @@ def rwkv_block(cfg, p, x, *, cache=None, mesh=None):
             if a in mesh.axis_names:
                 n_bt *= mesh.shape[a]
         s_prev = cp_wkv_scan(w_b, kv, mesh, seq_axis="model",
-                             algorithm=cfg.exscan_algorithm,
+                             spec=cfg.scan_spec,
                              batch_sharded=(B % n_bt == 0))
         s_final = None  # training path: final state unused
     elif cache is None:

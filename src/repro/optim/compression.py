@@ -7,8 +7,9 @@ fixed-size (k_max) for static shapes; each device may use fewer slots
 (threshold crossing) and the *compact* layout offsets — where rank r's
 entries start in the concatenated global value array — are the
 exclusive prefix sums of per-rank counts, computed with the paper's
-123-doubling exscan (`cfg.exscan_algorithm`-selectable like every other
-exscan site).
+exscan.  The algorithm is planner-selected (``ScanSpec``-driven like
+every other exscan site; the legacy ``algorithm=`` kwarg remains as a
+compatibility alias).
 
 Used inside shard_map over the data axes when
 ``TrainConfig.grad_compression_fraction`` is set (launch/train.py path
@@ -22,7 +23,12 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.core import collectives
+from repro.core.scan_api import ScanSpec, scan
+
+# Per-rank slot counts are a tiny int vector — the paper's small-m
+# regime, where "auto" picks the round-optimal schedule for the p at
+# hand (123-doubling at the paper's scales, two-⊕ at tiny power-of-2 p).
+OFFSETS_SPEC = ScanSpec(kind="exclusive", monoid="add", algorithm="auto")
 
 
 def _topk_sparsify(g: jax.Array, k: int):
@@ -41,7 +47,8 @@ def sparse_gradient_sync(
     axis_name: str,
     *,
     k_fraction: float = 0.01,
-    algorithm: str = "123",
+    spec: ScanSpec | None = None,
+    algorithm: str | None = None,
 ):
     """One EF-top-k gradient exchange. Call INSIDE shard_map.
 
@@ -79,7 +86,11 @@ def sparse_gradient_sync(
     # the paper's collective in its small-m regime.
     counts = jnp.array([max(1, int(g.size * k_fraction))
                         for g in flat_g], jnp.int32)
-    offsets = collectives.exscan(counts, axis_name, "add", algorithm)
+    ospec = (spec if spec is not None else OFFSETS_SPEC)
+    if algorithm is not None:  # legacy string path
+        ospec = ospec.over(axis_name, algorithm=algorithm)
+    offsets = scan(counts, ospec.over(axis_name, kind="exclusive",
+                                      monoid="add"))
     return synced, new_err, {"compact_offsets": offsets}
 
 

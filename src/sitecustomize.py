@@ -1,0 +1,47 @@
+"""Interpreter-startup hook (auto-imported by ``site`` whenever
+``src/`` is on PYTHONPATH): apply the jax forward-compat backfills
+before any user code runs, so snippets doing ``from jax import
+shard_map`` at the top work on images pinning an older jax.
+
+Python imports exactly ONE sitecustomize module, so this file would
+otherwise shadow the environment's own startup hooks (e.g. coverage.py
+subprocess measurement); to avoid that, after applying the backfills we
+chain-load the next ``sitecustomize.py`` found on ``sys.path``.
+
+Deliberately defensive — any failure (jax absent, etc.) must never
+break unrelated python processes that merely have src/ on their path.
+"""
+
+
+def _apply_backfills():
+    try:
+        from repro import _jax_compat
+
+        _jax_compat.apply()
+    except Exception:  # noqa: BLE001
+        pass
+
+
+def _chain_next_sitecustomize():
+    """Run the sitecustomize this file shadows, if any."""
+    import os
+    import sys
+
+    here = os.path.dirname(os.path.abspath(__file__))
+    for entry in sys.path:
+        try:
+            cand_dir = os.path.abspath(entry or os.getcwd())
+            if cand_dir == here:
+                continue
+            cand = os.path.join(cand_dir, "sitecustomize.py")
+            if os.path.isfile(cand):
+                import runpy
+
+                runpy.run_path(cand, run_name="sitecustomize")
+                break
+        except Exception:  # noqa: BLE001
+            break
+
+
+_apply_backfills()
+_chain_next_sitecustomize()

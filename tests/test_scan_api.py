@@ -1,0 +1,271 @@
+"""Planner (ScanSpec/ScanPlan) tests.
+
+Covers the ISSUE-1 acceptance criteria: ScanPlan's predicted
+rounds/⊕/all-gather counts exactly match ``collect_stats()``
+measurements of the traced programs for every registered algorithm at
+p in 2..17 (subprocess on 17 fake devices), the "auto" choice flips
+from 123-doubling to the ring as payload bytes grow, plan caching, the
+multi-axis sub-plan rewrite, and the deprecation shim on ModelConfig.
+"""
+
+import dataclasses
+
+import pytest
+
+from helpers import run_with_devices
+
+from repro.core.scan_api import (
+    CostModel, ScanSpec, algorithms, plan, plan_cache_clear)
+
+
+# ---------------------------------------------------------------------------
+# Pure planner behavior (no devices)
+# ---------------------------------------------------------------------------
+
+
+def test_registry_covers_all_kinds():
+    assert algorithms("exclusive") == (
+        "123", "1doubling", "native", "ring", "two_op")
+    assert algorithms("inclusive") == ("hillis_steele",)
+    assert algorithms("allreduce") == ("butterfly",)
+
+
+def test_plan_matches_theory_round_counts():
+    from repro.core import oracle
+
+    for p in range(1, 40):
+        assert plan(ScanSpec(algorithm="123"), p).rounds == oracle.q_123(p)
+        assert plan(ScanSpec(algorithm="1doubling"), p).rounds == \
+            oracle.rounds_1doubling(p)
+        assert plan(ScanSpec(algorithm="two_op"), p).rounds == \
+            oracle.rounds_two_op(p)
+        assert plan(ScanSpec(algorithm="ring"), p).rounds == max(0, p - 1)
+        assert plan(ScanSpec(algorithm="native"), p).rounds == 0
+
+
+def test_auto_small_payload_picks_123_at_paper_scale():
+    # p=36 is the paper's cluster: q=6 rounds beats 1-doubling (7) and
+    # ties two-⊕ (6) with fewer ⊕ — the planner must take 123.
+    pl = plan(ScanSpec(algorithm="auto"), p=36, nbytes=8)
+    assert pl.algorithm == "123"
+    # expensive monoid pushes harder toward ⊕-frugal 123
+    pl = plan(ScanSpec(algorithm="auto", monoid="affine"), p=36, nbytes=64)
+    assert pl.algorithm == "123"
+
+
+def test_auto_flips_to_ring_as_payload_grows():
+    spec = ScanSpec(algorithm="auto")
+    small = plan(spec, p=36, nbytes=64)
+    large = plan(spec, p=36, nbytes=64 << 20)
+    assert small.algorithm == "123"
+    assert large.algorithm == "ring"
+    # the flip is monotone: find the boundary and check both sides
+    lo, hi = 64, 64 << 20
+    while lo * 2 < hi:
+        mid = lo * 2
+        if plan(spec, p=36, nbytes=mid).algorithm == "123":
+            lo = mid
+        else:
+            hi = mid
+    assert plan(spec, p=36, nbytes=lo).algorithm == "123"
+    assert plan(spec, p=36, nbytes=hi).algorithm == "ring"
+
+
+def test_auto_respects_cost_model_override():
+    # a latency-free, bandwidth-free model cares only about ⊕ count:
+    # native's p-1 local folds lose to 123's q-1 even for huge payloads
+    ops_only = CostModel(alpha=0.0, beta=0.0, gamma=1.0)
+    pl = plan(ScanSpec(algorithm="auto"), p=36, nbytes=64 << 20,
+              cost_model=ops_only)
+    assert pl.algorithm in ("123", "1doubling")  # ⊕-frugal families
+    # an all-gather-loving model (free bandwidth/ops, latency counts
+    # hops: native = p-1 ring hops) still prefers 123's q rounds…
+    lat_only = CostModel(alpha=1.0, beta=0.0, gamma=0.0)
+    assert plan(ScanSpec(algorithm="auto"), p=36, nbytes=1,
+                cost_model=lat_only).algorithm == "123"
+
+
+def test_plan_cache_returns_same_object():
+    plan_cache_clear()
+    a = plan(ScanSpec(algorithm="auto"), p=16, nbytes=128)
+    b = plan(ScanSpec(algorithm="auto"), p=16, nbytes=128)
+    assert a is b
+    c = plan(ScanSpec(algorithm="auto"), p=16, nbytes=129)
+    assert c is not a
+
+
+def test_multiaxis_plan_rewrites_into_subplans():
+    spec = ScanSpec(kind="exclusive", algorithm="123",
+                    axis_name=("pod", "data"))
+    pl = plan(spec, p=(2, 8), nbytes=64)
+    assert pl.p == 16
+    inner, reduce_, outer = pl.sub_plans
+    assert inner.spec.kind == "exclusive" and inner.p == 8
+    assert reduce_.spec.kind == "allreduce" and reduce_.p == 8
+    assert outer.spec.kind == "exclusive" and outer.p == 2
+    assert pl.rounds == inner.rounds + reduce_.rounds + outer.rounds
+    # +1 for the outer ⊕ combining the two partial prefixes
+    assert pl.op_applications == (
+        inner.op_applications + reduce_.op_applications
+        + outer.op_applications + 1)
+    assert "allreduce" in pl.describe()
+
+
+def test_spec_validation_and_over():
+    with pytest.raises(ValueError):
+        ScanSpec(kind="bogus")
+    spec = ScanSpec(kind="exclusive", monoid="add")
+    s2 = spec.over(("pod", "data"), monoid="affine")
+    assert s2.axis_name == ("pod", "data") and s2.monoid == "affine"
+    assert spec.axis_name is None  # original untouched
+    with pytest.raises(ValueError):
+        plan(ScanSpec(algorithm="nope"), p=8)
+    with pytest.raises(ValueError):
+        plan(spec, p=(2, 4))  # one axis, two sizes
+
+
+def test_host_exscan_twin():
+    import numpy as np
+
+    from repro.core.scan_api import host_exscan
+
+    lengths = np.array([3, 1, 4, 1, 5], np.int64)
+    np.testing.assert_array_equal(host_exscan(lengths),
+                                  np.array([0, 3, 4, 8, 9]))
+    np.testing.assert_array_equal(host_exscan(np.array([7])), [0])
+
+
+def test_modelconfig_scan_spec_shim():
+    from repro.models.config import ModelConfig
+
+    base = dict(name="t", family="dense", n_layers=1, d_model=8,
+                n_heads=1, n_kv_heads=1, d_ff=16, vocab=32)
+    cfg = ModelConfig(**base)
+    assert cfg.scan_spec.algorithm == "auto"  # planner by default
+    cfg = ModelConfig(**base, scan=ScanSpec(algorithm="ring"))
+    assert cfg.scan_spec.algorithm == "ring"
+    # deprecated string knob still works, with a warning
+    cfg = ModelConfig(**base, exscan_algorithm="native")
+    with pytest.warns(DeprecationWarning):
+        assert cfg.scan_spec.algorithm == "native"
+    cfg2 = dataclasses.replace(cfg, dtype="float32")
+    with pytest.warns(DeprecationWarning):
+        assert cfg2.scan_spec.algorithm == "native"  # survives replace
+
+
+# ---------------------------------------------------------------------------
+# Plan-vs-measurement property (the acceptance criterion): predicted
+# rounds/⊕/all-gathers equal collect_stats() of the traced program for
+# EVERY registered algorithm of every kind at p in 2..17.
+# ---------------------------------------------------------------------------
+
+_PROPERTY = """
+import jax, numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+from jax import shard_map
+import repro.core.collectives as ex
+from repro.core.scan_api import ScanSpec, scan, plan, algorithms
+
+devs = np.array(jax.devices())
+checked = 0
+for p in range(2, 18):
+    mesh = Mesh(devs[:p].reshape(p), ("x",))
+    x = np.arange(p * 4, dtype=np.int32).reshape(p, 4)
+    ref = np.zeros_like(x)
+    ref[1:] = np.cumsum(x[:-1], axis=0)
+    for kind in ("exclusive", "inclusive", "allreduce"):
+        for alg in algorithms(kind):
+            spec = ScanSpec(kind=kind, monoid="add", algorithm=alg,
+                            axis_name="x")
+            with ex.collect_stats() as st:
+                f = jax.jit(shard_map(lambda v: scan(v, spec), mesh=mesh,
+                                      in_specs=P("x"), out_specs=P("x")))
+                got = np.asarray(f(x))
+            pl = plan(spec, p=p, nbytes=16)
+            assert st.rounds == pl.rounds, (kind, alg, p, st, pl)
+            assert st.op_applications == pl.op_applications, \\
+                (kind, alg, p, st, pl)
+            assert st.allgathers == pl.allgathers, (kind, alg, p, st, pl)
+            if kind == "exclusive":
+                assert np.array_equal(got, ref), (alg, p)
+            elif kind == "inclusive":
+                assert np.array_equal(got, np.cumsum(x, axis=0)), (alg, p)
+            else:
+                assert np.array_equal(
+                    got, np.broadcast_to(x.sum(0, keepdims=True), x.shape)
+                ), (alg, p)
+            checked += 1
+print("OK plans-match-measurements", checked)
+"""
+
+
+def test_plan_predictions_match_measured_stats():
+    out = run_with_devices(_PROPERTY, 17, x64=False, timeout=1200)
+    assert "OK plans-match-measurements" in out
+    # 16 p-values x (5 exclusive + 1 inclusive + 1 allreduce)
+    assert "112" in out
+
+
+# "auto" end-to-end: the traced program uses the planner's pick, and the
+# measured round count equals the plan's prediction.
+_AUTO = """
+import jax, numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+from jax import shard_map
+import repro.core.collectives as ex
+from repro.core.scan_api import ScanSpec, scan, plan
+
+p = 8
+mesh = Mesh(np.array(jax.devices())[:p].reshape(p), ("x",))
+x = np.arange(p * 4, dtype=np.int32).reshape(p, 4)
+ref = np.zeros_like(x)
+ref[1:] = np.cumsum(x[:-1], axis=0)
+spec = ScanSpec(kind="exclusive", monoid="add", algorithm="auto",
+                axis_name="x")
+with ex.collect_stats() as st:
+    f = jax.jit(shard_map(lambda v: scan(v, spec), mesh=mesh,
+                          in_specs=P("x"), out_specs=P("x")))
+    got = np.asarray(f(x))
+pl = plan(spec, p=p, nbytes=x[0].nbytes)
+assert np.array_equal(got, ref)
+assert st.rounds == pl.rounds, (st.rounds, pl.rounds)
+print("OK auto", pl.algorithm, pl.rounds)
+"""
+
+
+def test_auto_spec_end_to_end():
+    out = run_with_devices(_AUTO, 8, x64=False)
+    assert "OK auto" in out
+
+
+# Legacy wrapper compatibility: the string API must still trace the
+# same programs (tests elsewhere pin its round counts; here just the
+# import surface and multi-axis path through the planner rewrite).
+_LEGACY = """
+import jax, numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+from jax import shard_map
+import repro.core.collectives as ex
+
+x = np.arange(8 * 4, dtype=np.int64).reshape(8, 4)
+ref = np.zeros_like(x)
+ref[1:] = np.cumsum(x[:-1], axis=0)
+mesh = Mesh(np.array(jax.devices()).reshape(2, 4), ("pod", "data"))
+f = shard_map(lambda v: ex.exscan(v, ("pod", "data"), "add", "123"),
+              mesh=mesh, in_specs=P(("pod", "data")),
+              out_specs=P(("pod", "data")))
+with ex.collect_stats() as st:
+    got = jax.jit(f)(x)
+np.testing.assert_array_equal(np.asarray(got), ref)
+from repro.core.scan_api import ScanSpec, plan
+pl = plan(ScanSpec(kind="exclusive", algorithm="123",
+                   axis_name=("pod", "data")), p=(2, 4), nbytes=32)
+assert st.rounds == pl.rounds, (st.rounds, pl.rounds)
+assert st.op_applications == pl.op_applications
+print("OK legacy multiaxis", st.rounds, st.op_applications)
+"""
+
+
+def test_legacy_wrapper_multiaxis_through_planner():
+    out = run_with_devices(_LEGACY, 8)
+    assert "OK legacy multiaxis" in out
