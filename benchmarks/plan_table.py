@@ -1,15 +1,23 @@
 """Planner decision table: which algorithm ``"auto"`` picks per (p, m).
 
-Pure planning math — no devices, no tracing: for each rank count p and
-payload size m the rows give the chosen algorithm plus its predicted
-rounds and cost-model latency, under both interconnect tiers
-(ICI intra-pod, DCI cross-pod; launch/mesh.py parameters).  This is the
-paper's "regimes" story made executable: 123-doubling owns the small-m
-rows, the pipelined ring takes over as m grows.
+No devices, no tracing: for each rank count p and payload size m the
+rows give the chosen algorithm, its planner-chosen segment count S
+(the pipelined ring splits the payload into S blocks and streams them
+through p−2+S neighbour rounds), predicted rounds and cost-model
+latency under both interconnect tiers (ICI intra-pod, DCI cross-pod;
+launch/mesh.py parameters), plus the rounds *measured* by executing the
+chosen plan's schedule in the numpy simulator executor — plan vs
+measurement drift is visible in the table and fails the build in
+``--check`` mode (CI smoke).  This is the paper's "regimes" story made
+executable: 123-doubling owns the small-m rows, the pipelined
+segmented ring takes over as m grows.
 """
 
 from __future__ import annotations
 
+import argparse
+
+from repro.core import schedule as schedule_lib
 from repro.core.scan_api import ScanSpec, plan
 from repro.launch.mesh import DCI_COST, ICI_COST
 
@@ -19,21 +27,38 @@ MS = (8, 1024, 65_536, 1_048_576, 16_777_216)  # payload bytes
 TIERS = (("ici", ICI_COST), ("dci", DCI_COST))
 
 
-def run(csv_rows: list):
+def run(csv_rows: list, check: bool = False):
     spec = ScanSpec(kind="exclusive", monoid="add", algorithm="auto")
+    drift = []
     for tier, cm in TIERS:
         for p in PS:
             for m in MS:
                 pl = plan(spec, p=p, nbytes=m, cost_model=cm)
+                res = schedule_lib.verify_plan(pl)
                 key = f"plan/{tier}/p{p}/m{m}"
                 csv_rows.append((key + "/algorithm", pl.algorithm,
                                  "auto_choice"))
+                csv_rows.append((key + "/segments", pl.segments,
+                                 "pipeline_S"))
                 csv_rows.append((key + "/rounds", pl.rounds, "rounds"))
+                csv_rows.append((key + "/rounds_measured",
+                                 res["rounds_measured"],
+                                 "simulator_executor"))
                 csv_rows.append((key + "/cost_us", pl.cost * 1e6,
                                  "us_abg_model"))
+                if not res["ok"]:
+                    drift.append((key, res))
+    if check and drift:
+        raise SystemExit(
+            f"plan/measurement drift in {len(drift)} cells: {drift}")
     return csv_rows
 
 
 if __name__ == "__main__":
-    for r in run([]):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--check", action="store_true",
+                    help="fail if any plan disagrees with the "
+                         "simulator-executed schedule (CI smoke)")
+    args = ap.parse_args()
+    for r in run([], check=args.check):
         print(",".join(str(x) for x in r))

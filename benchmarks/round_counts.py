@@ -1,23 +1,51 @@
 """Theorem 1 table: rounds and ⊕ applications vs p for the three
-exclusive-scan algorithms (exact, from the message-schedule oracle)."""
+exclusive-scan algorithms (exact, from the message-schedule oracle),
+plus the pipelined segmented ring's p−2+S rounds measured by executing
+its schedule IR in the numpy simulator executor against the plan's
+prediction (``--check`` turns any drift into a build failure)."""
 
 from __future__ import annotations
 
+import argparse
+
 from repro.core import oracle
+from repro.core import schedule as schedule_lib
+from repro.core.scan_api import ScanSpec, plan
 
 PS = (4, 8, 16, 32, 36, 64, 128, 256, 512, 1024)
+RING_PS = (4, 8, 16, 36, 64)  # simulator-executed, keep p moderate
+RING_SS = (1, 4, 16)
 
 
-def run(csv_rows: list):
+def run(csv_rows: list, check: bool = False):
     for p in PS:
         for alg in ("two_op", "1doubling", "123"):
             st = oracle.verify(p, alg)
             csv_rows.append((f"rounds/{alg}/p{p}", st.rounds, "rounds"))
             csv_rows.append((f"ops/{alg}/p{p}", st.result_path_ops,
                              "oplus_result_path"))
+    drift = []
+    for p in RING_PS:
+        for S in RING_SS:
+            pl = plan(ScanSpec(kind="exclusive", algorithm="ring",
+                               segments=S), p=p, nbytes=S * 64)
+            res = schedule_lib.verify_plan(pl)
+            key = f"rounds/ring_S{S}/p{p}"
+            csv_rows.append((key, pl.rounds, "rounds_predicted"))
+            csv_rows.append((key + "_measured", res["rounds_measured"],
+                             "simulator_executor"))
+            if not res["ok"]:
+                drift.append((key, res))
+    if check and drift:
+        raise SystemExit(
+            f"plan/measurement drift in {len(drift)} cells: {drift}")
     return csv_rows
 
 
 if __name__ == "__main__":
-    for r in run([]):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--check", action="store_true",
+                    help="fail on plan-vs-simulator drift (CI smoke)")
+    args = ap.parse_args()
+    for r in run([], check=args.check):
         print(",".join(str(x) for x in r))

@@ -47,8 +47,17 @@ def main():
     pl = plan(spec, p=p, nbytes=x[0].nbytes)  # inspectable, pre-tracing
     print("auto plan for this payload:")
     print(" ", pl.describe())
-    print("  (large payloads flip the choice: "
-          f"1MB -> {plan(spec, p=p, nbytes=1 << 20).algorithm})\n")
+
+    # --- plans are executable schedules: inspect round-by-round peers,
+    # masks and combine directions WITHOUT tracing anything ---
+    print("\nits schedule IR (what the executors run):")
+    print("  " + pl.schedule().describe().replace("\n", "\n  "))
+    big = plan(spec, p=p, nbytes=1 << 20)
+    print("\n1MB payload flips to the pipelined segmented ring "
+          f"({big.algorithm}, S={big.segments}, p-2+S={big.rounds} "
+          f"rounds, ~{big.bytes_on_wire / (1 << 20):.2f}·m serialized):")
+    print("  " + "\n  ".join(
+        big.schedule().describe().split("\n")[:4]) + "\n    ...\n")
 
     for alg in algorithms("exclusive") + ("auto",):
         aspec = spec.over("ranks", algorithm=alg)
@@ -66,12 +75,19 @@ def main():
               f"{'  <- planned: ' + apl.algorithm if alg == 'auto' else ''}"
               f"  ✓ correct")
 
-    # --- the legacy string API still works (compatibility wrapper) ---
-    fn = jax.jit(shard_map(
-        lambda v: collectives.exscan(v, "ranks", "add", "123"),
-        mesh=mesh, in_specs=P("ranks"), out_specs=P("ranks")))
-    assert np.array_equal(np.asarray(fn(x)), expected)
-    print("\nlegacy collectives.exscan(x, axis, 'add', '123') ✓ still works")
+    # --- the legacy string API still works, but is deprecated ---
+    import warnings
+
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        fn = jax.jit(shard_map(
+            lambda v: collectives.exscan(v, "ranks", "add", "123"),
+            mesh=mesh, in_specs=P("ranks"), out_specs=P("ranks")))
+        assert np.array_equal(np.asarray(fn(x)), expected)
+    assert any(issubclass(w.category, DeprecationWarning)
+               for w in caught)
+    print("\nlegacy collectives.exscan(...) ✓ still works "
+          "(with a DeprecationWarning pointing at ScanSpec)")
 
     print("\nTheorem 1 at the paper's p=36 and at pod scale:")
     for p_ in (36, 256, 512):

@@ -1,12 +1,14 @@
-"""SPMD prefix-scan collectives: implementations behind ``scan_api``.
+"""SPMD prefix-scan collectives: algorithm registry behind ``scan_api``.
 
-Each simultaneous send-receive communication round of the paper becomes
-one ``lax.ppermute`` along a named mesh axis (every device sends and
-receives at most one message per round — the paper's one-ported model).
-Edge ranks, which in the MPI formulation conditionally skip
-sends/receives, are handled uniformly in SPMD via the monoid identity
-and masked combines; the masks are exactly the paper's loop conditions
-(``0 < f``, ``t < p``).
+Since the schedule-IR redesign, every algorithm here is a *schedule
+builder* (:mod:`repro.core.schedule`): it returns the explicit
+round-by-round program — peer offsets, SPMD masks, combine directions —
+that the SPMD ``ppermute`` executor traces under ``shard_map``, the
+pure-numpy simulator runs at any p without devices, and the Pallas
+executor lowers through the on-chip block-combine kernel.  The planner
+counts its predicted rounds/⊕/all-gathers off the same IR, so
+``ScanPlan`` predictions equal ``collect_stats()`` measurements by
+construction.
 
 The preferred entry point is the planner API::
 
@@ -14,12 +16,10 @@ The preferred entry point is the planner API::
 
     spec = ScanSpec(kind="exclusive", monoid="add", algorithm="auto")
     y = scan(x, spec.over("data"))        # planner picks the algorithm
-    plan(spec, p=256, nbytes=64)          # inspect the choice first
+    pl = plan(spec, p=256, nbytes=64)     # inspect the choice first
+    print(pl.schedule().describe())       # round-by-round, no tracing
 
-Every implementation below registers itself with
-``@register_algorithm(...)``, carrying its theoretical round/⊕/byte
-costs from :mod:`repro.core.oracle` so plans predict ``collect_stats``
-measurements exactly.  Registered exclusive-scan algorithms:
+Registered exclusive-scan algorithms:
 
   * ``"123"``        — the paper's new 123-doubling algorithm
                        (Algorithm 1): q = ceil(log2(p-1)+log2(4/3))
@@ -30,388 +30,61 @@ measurements exactly.  Registered exclusive-scan algorithms:
                        2*ceil(log2 p)-1 ⊕.
   * ``"native"``     — all-gather + local fold (what a library would do
                        without the paper; XLA-native collective).
-  * ``"ring"``       — p-1 neighbour rounds (the pipelined/fixed-degree
-                       baseline the paper cites for large m; see
-                       DESIGN.md §7).
+  * ``"ring"``       — the pipelined segmented neighbour ring the paper
+                       cites for large m: p−2+S rounds of one m/S-byte
+                       segment each (S=1: the plain p−1-round ring);
+                       the planner picks S from the α/β trade-off.
 
-The legacy string API is kept as thin compatibility wrappers over
-``scan_api``: ``exscan(x, axis, m, algorithm)``,
-``inclusive_scan(x, axis, m)`` and ``allreduce(x, axis, m)``.
+The legacy string API (``exscan``/``inclusive_scan``/``allreduce``) is
+kept as deprecated wrappers over ``scan_api`` — they emit
+``DeprecationWarning`` pointing at :class:`ScanSpec`.
 
-All functions must be called inside ``shard_map`` (or any context where
+All execution must happen inside ``shard_map`` (or any context where
 ``axis_name`` is bound).  Inputs may be arbitrary pytrees; the monoid
 operates on the whole tree.
 """
 
 from __future__ import annotations
 
-import contextlib
-import dataclasses
-import math
-import threading
-
-import jax
-import jax.numpy as jnp
-from jax import lax
+import warnings
 
 from repro.core import monoid as monoid_lib
 from repro.core import oracle
 from repro.core import scan_api
+from repro.core import schedule as schedule_lib
 from repro.core.scan_api import ScanSpec, register_algorithm, scan
 
-
-# ---------------------------------------------------------------------------
-# Trace-time instrumentation: counts ppermute rounds and ⊕ applications so
-# tests and benchmarks can assert the paper's costs on the actual
-# implementation (not just the numpy oracle).
-# ---------------------------------------------------------------------------
-
-
-@dataclasses.dataclass
-class CollectiveStats:
-    rounds: int = 0  # ppermute calls (communication rounds)
-    op_applications: int = 0  # ⊕ applications per device (SPMD)
-    allgathers: int = 0
-    bytes_per_round: list = dataclasses.field(default_factory=list)
-
-
-_tls = threading.local()
-
-
-@contextlib.contextmanager
-def collect_stats():
-    """Context manager capturing round/op counts of scans traced inside."""
-    stats = CollectiveStats()
-    prev = getattr(_tls, "stats", None)
-    _tls.stats = stats
-    try:
-        yield stats
-    finally:
-        _tls.stats = prev
-
-
-def _stats() -> CollectiveStats | None:
-    return getattr(_tls, "stats", None)
-
-
-def _nbytes(tree) -> int:
-    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(tree))
-
-
-def _record_round(tree):
-    s = _stats()
-    if s is not None:
-        s.rounds += 1
-        s.bytes_per_round.append(_nbytes(tree))
-
-
-def _record_op(n: int = 1):
-    """Count n ⊕ *executions* (a traced-once loop body records its trip
-    count, so stats mean executions, not trace sites)."""
-    s = _stats()
-    if s is not None:
-        s.op_applications += n
-
-
-def _record_allgather():
-    s = _stats()
-    if s is not None:
-        s.allgathers += 1
+# Trace/execution-time instrumentation lives with the executors in
+# core/schedule.py; re-exported here because this module has always
+# been its public home (``collectives.collect_stats()``).
+CollectiveStats = schedule_lib.CollectiveStats
+collect_stats = schedule_lib.collect_stats
+_record_op = schedule_lib._record_op
+_record_round = schedule_lib._record_round
+_record_allgather = schedule_lib._record_allgather
 
 
 # ---------------------------------------------------------------------------
-# Helpers
+# Algorithm registry: schedule builders + their kinds.  The builders —
+# and the executors that run them — live in core/schedule.py; this
+# module binds them to the planner.
 # ---------------------------------------------------------------------------
 
-
-def _axis_size(axis_name) -> int:
-    return lax.axis_size(axis_name)
-
-
-def _shift_up(tree, axis_name: str, skip: int, p: int):
-    """One communication round: rank r sends to r+skip (where r+skip < p).
-
-    Non-receiving ranks get zero-fill from ppermute; callers mask.
-    """
-    perm = [(r, r + skip) for r in range(p - skip)]
-    _record_round(tree)
-    return jax.tree.map(lambda x: lax.ppermute(x, axis_name, perm), tree)
-
-
-def _masked_combine(m: monoid_lib.Monoid, recv, w, mask):
-    """W <- recv ⊕ W where mask, else W (recv covers lower ranks)."""
-    combined = m.op(recv, w)
-    _record_op()
-    return jax.tree.map(
-        lambda c, x: jnp.where(mask, c, x), combined, w
-    )
-
-
-def _fixup_identity(m: monoid_lib.Monoid, recv, has_src):
-    """Replace zero-fill from ppermute with the monoid identity."""
-    ident = m.identity_like(recv)
-    return jax.tree.map(
-        lambda t, i: jnp.where(has_src, t, i), recv, ident
-    )
-
-
-def _doubling_phase(w, axis_name: str, m: monoid_lib.Monoid, r, p: int,
-                    skips, strict: bool = True):
-    """The doubling loop shared by 123-doubling, 1-doubling and the
-    Hillis-Steele inclusive scan: for each skip s, W ← W_{r-s} ⊕ W on
-    ranks where the window still reaches below 0 (mask ``r > s``, or
-    ``r >= s`` for the inclusive scan where W covers the rank itself).
-    """
-    for s in skips:
-        recv = _shift_up(w, axis_name, s, p)
-        has = r > s if strict else r >= s
-        w = _masked_combine(m, _fixup_identity(m, recv, has), w, has)
-    return w
+register_algorithm("123", kind="exclusive")(schedule_lib.build_123)
+register_algorithm("1doubling",
+                   kind="exclusive")(schedule_lib.build_1doubling)
+register_algorithm("two_op", kind="exclusive")(schedule_lib.build_two_op)
+register_algorithm("native", kind="exclusive")(schedule_lib.build_native)
+register_algorithm("ring", kind="exclusive",
+                   segmentable=True)(schedule_lib.build_ring)
+register_algorithm("hillis_steele",
+                   kind="inclusive")(schedule_lib.build_hillis_steele)
+register_algorithm("butterfly",
+                   kind="allreduce")(schedule_lib.build_butterfly)
 
 
 # ---------------------------------------------------------------------------
-# Predicted-cost functions for the registry (see scan_api.ScanAlgorithm:
-# these must match collect_stats() measurements of the traced programs —
-# tests/test_scan_api.py asserts this for every p in 2..17).
-# ---------------------------------------------------------------------------
-
-
-def _ops_123(p: int) -> int:
-    # round 1 records a send-side prep + a combine, each later round one
-    # combine: 2 + (rounds - 2) = rounds (p >= 3).
-    return 0 if p <= 2 else oracle.q_123(p)
-
-
-def _ops_1doubling(p: int) -> int:
-    return max(0, oracle.rounds_1doubling(p) - 1)
-
-
-def _ops_two_op(p: int) -> int:
-    return 2 * max(0, oracle.rounds_two_op(p) - 1)
-
-
-def _rounds_inclusive(p: int) -> int:
-    return 0 if p <= 1 else math.ceil(math.log2(p))
-
-
-def _rounds_butterfly(p: int) -> int:
-    return 0 if p <= 1 else math.ceil(math.log2(p))
-
-
-def _ops_butterfly(p: int) -> int:
-    if p <= 1:
-        return 0
-    if p & (p - 1):  # non-power-of-two: inclusive scan + broadcast
-        return _rounds_inclusive(p)
-    return 2 * _rounds_butterfly(p)
-
-
-def _ag_butterfly(p: int) -> int:
-    return 1 if p > 1 and (p & (p - 1)) else 0
-
-
-# ---------------------------------------------------------------------------
-# The paper's algorithms
-# ---------------------------------------------------------------------------
-
-
-@register_algorithm(
-    "123", kind="exclusive", rounds=oracle.q_123, ops=_ops_123)
-def exscan_123(x, axis_name: str, m: monoid_lib.Monoid):
-    """Algorithm 1 (123-doubling) as q ppermute rounds.
-
-    Skip schedule s_0=1, s_1=2, s_k=3*2^(k-2).  Masks mirror the paper's
-    conditions: round-0 receive iff r>=1, round-1 combine iff r>=2,
-    round-k combine iff r - s_k > 0 (rank complete once its window
-    bottoms out at 0 — the paper's ``while 0 < f``).
-    """
-    p = _axis_size(axis_name)
-    r = lax.axis_index(axis_name)
-    if p == 1:
-        return m.identity_like(x)
-
-    # Round 0 (skip 1): W = V_{r-1}; rank 0 holds the identity.
-    recv = _shift_up(x, axis_name, 1, p)
-    w = _fixup_identity(m, recv, r >= 1)
-    if p == 2:
-        return w
-
-    # Round 1 (skip 2): send W ⊕ V (rank 0's W is the identity, so it
-    # sends plain V exactly as in Algorithm 1); combine T ⊕ W iff r >= 2.
-    prep = m.op(w, x)
-    _record_op()
-    recv = _shift_up(prep, axis_name, 2, p)
-    w = _masked_combine(m, _fixup_identity(m, recv, r >= 2), w, r >= 2)
-
-    # Rounds k >= 2 (skip 3*2^(k-2)): plain doubling on W.
-    return _doubling_phase(w, axis_name, m, r, p, oracle.skips_123(p)[2:])
-
-
-@register_algorithm(
-    "1doubling", kind="exclusive", rounds=oracle.rounds_1doubling,
-    ops=_ops_1doubling)
-def exscan_1doubling(x, axis_name: str, m: monoid_lib.Monoid):
-    """Shift + straight doubling: 1 + ceil(log2(p-1)) rounds."""
-    p = _axis_size(axis_name)
-    r = lax.axis_index(axis_name)
-    if p == 1:
-        return m.identity_like(x)
-
-    recv = _shift_up(x, axis_name, 1, p)
-    w = _fixup_identity(m, recv, r >= 1)
-    return _doubling_phase(w, axis_name, m, r, p,
-                           oracle.skips_1doubling(p)[1:])
-
-
-@register_algorithm(
-    "two_op", kind="exclusive", rounds=oracle.rounds_two_op,
-    ops=_ops_two_op)
-def exscan_two_op(x, axis_name: str, m: monoid_lib.Monoid):
-    """Two-⊕ doubling: ceil(log2 p) rounds, two ⊕ per round after the first."""
-    p = _axis_size(axis_name)
-    r = lax.axis_index(axis_name)
-    if p == 1:
-        return m.identity_like(x)
-
-    recv = _shift_up(x, axis_name, 1, p)
-    w = _fixup_identity(m, recv, r >= 1)
-
-    k = 1
-    while (1 << k) < p:
-        s = 1 << k
-        prep = m.op(w, x)  # W ⊕ V  (rank 0: identity ⊕ V = V)
-        _record_op()
-        recv = _shift_up(prep, axis_name, s, p)
-        w = _masked_combine(m, _fixup_identity(m, recv, r >= s), w, r >= s)
-        k += 1
-    return w
-
-
-@register_algorithm(
-    "native", kind="exclusive", rounds=lambda p: 0,
-    ops=lambda p: max(0, p - 1),
-    allgathers=lambda p: 0 if p <= 1 else 1,
-    latency_hops=lambda p: max(0, p - 1),  # ring all-gather on tori
-    wire_bytes=lambda p, m: p * m if p > 1 else 0)
-def exscan_native(x, axis_name: str, m: monoid_lib.Monoid):
-    """Baseline: all-gather everyone's V, fold locally below own rank.
-
-    One all-gather "round" but p·m bytes on the wire and p-1 local ⊕ —
-    the standard library fallback the paper improves upon for small m.
-    """
-    p = _axis_size(axis_name)
-    r = lax.axis_index(axis_name)
-    if p == 1:
-        return m.identity_like(x)
-    _record_allgather()
-    gathered = jax.tree.map(
-        lambda t: lax.all_gather(t, axis_name, axis=0), x
-    )
-    ident = m.identity_like(x)
-
-    def body(i, acc):
-        vi = jax.tree.map(lambda g: g[i], gathered)
-        take = i < r
-        combined = m.op(acc, vi)
-        return jax.tree.map(
-            lambda c, a: jnp.where(take, c, a), combined, acc
-        )
-
-    _record_op(p - 1)  # the fori_loop body executes p-1 times
-    return lax.fori_loop(0, p - 1, body, ident)
-
-
-@register_algorithm(
-    "ring", kind="exclusive", rounds=lambda p: max(0, p - 1),
-    ops=lambda p: max(0, p - 2),
-    # serial_bytes prices the PIPELINED ring of the paper's large-m
-    # citation (segments overlap the p-1 neighbour rounds -> ~2m on the
-    # bandwidth critical path).  The SPMD program below is an
-    # UNPIPELINED stand-in — full m bytes per round, (p-1)·m serialized
-    # (= wire_bytes) — so treat "auto" picking ring as "a pipelined
-    # fixed-degree algorithm belongs here"; see DESIGN.md §7 and the
-    # ROADMAP item on payload-segmented rings.
-    serial_bytes=lambda p, m: 2 * m if p > 1 else 0)
-def exscan_ring(x, axis_name: str, m: monoid_lib.Monoid):
-    """p-1 neighbour rounds; latency-poor but each round is 1 hop.
-
-    Included as the pipelined/fixed-degree comparison point the paper
-    cites for large m.
-    """
-    p = _axis_size(axis_name)
-    r = lax.axis_index(axis_name)
-    if p == 1:
-        return m.identity_like(x)
-    recv = _shift_up(x, axis_name, 1, p)
-    w = _fixup_identity(m, recv, r >= 1)
-    acc = w  # running exclusive prefix
-    carry = w  # value to forward (V_{r-1} partial chain)
-    for step in range(1, p - 1):
-        # Forward the chain: each round, rank r receives V_{r-step-1}'s
-        # running partial and folds it in if still needed.
-        recv = _shift_up(carry, axis_name, 1, p)
-        recv = _fixup_identity(m, recv, r >= step + 1)
-        acc = _masked_combine(m, recv, acc, r >= step + 1)
-        carry = recv
-    return acc
-
-
-@register_algorithm(
-    "hillis_steele", kind="inclusive", rounds=_rounds_inclusive,
-    ops=_rounds_inclusive)
-def _inclusive_hillis_steele(x, axis_name: str, m: monoid_lib.Monoid):
-    """Hillis-Steele inclusive scan: ceil(log2 p) rounds, one ⊕ each."""
-    p = _axis_size(axis_name)
-    r = lax.axis_index(axis_name)
-    return _doubling_phase(x, axis_name, m, r, p,
-                           oracle.skips_two_op(p), strict=False)
-
-
-@register_algorithm(
-    "butterfly", kind="allreduce", rounds=_rounds_butterfly,
-    ops=_ops_butterfly, allgathers=_ag_butterfly)
-def _allreduce_butterfly(x, axis_name: str, m: monoid_lib.Monoid):
-    """Recursive-doubling (butterfly) all-reduce under an arbitrary monoid.
-
-    ceil(log2 p) rounds.  For non-commutative monoids the butterfly
-    exchange pattern preserves rank order within each combine (lower
-    block always on the left).
-    """
-    p = _axis_size(axis_name)
-    if p == 1:
-        return x
-    r = lax.axis_index(axis_name)
-    w = x
-    # For non-power-of-two p fall back to inclusive scan + broadcast of the
-    # last rank's value (2*ceil(log2 p) rounds worst case, still log).
-    if p & (p - 1):
-        incl = _inclusive_hillis_steele(x, axis_name, m)
-        # broadcast rank p-1's inclusive value to everyone
-        _record_allgather()
-        return jax.tree.map(
-            lambda t: lax.all_gather(t, axis_name, axis=0)[p - 1], incl
-        )
-    k = 0
-    while (1 << k) < p:
-        s = 1 << k
-        perm = [(i, i ^ s) for i in range(p)]
-        _record_round(w)
-        recv = jax.tree.map(lambda t: lax.ppermute(t, axis_name, perm), w)
-        low_side = (r & s) != 0  # partner is the lower block
-        combined_lo = m.op(recv, w)  # partner low, self high
-        combined_hi = m.op(w, recv)  # self low, partner high
-        _record_op(2)
-        w = jax.tree.map(
-            lambda lo, hi: jnp.where(low_side, lo, hi),
-            combined_lo,
-            combined_hi,
-        )
-        k += 1
-    return w
-
-
-# ---------------------------------------------------------------------------
-# Legacy string API — thin wrappers over scan_api (kept for
+# Legacy string API — deprecated wrappers over scan_api (kept for
 # backward compatibility; new code should build a ScanSpec and call
 # scan_api.scan / scan_api.plan directly).
 # ---------------------------------------------------------------------------
@@ -419,12 +92,20 @@ def _allreduce_butterfly(x, axis_name: str, m: monoid_lib.Monoid):
 ALGORITHMS = scan_api.algorithms("exclusive")
 
 
-def exscan(x, axis_name, m="add", algorithm: str = "123"):
-    """Exclusive prefix scan along one or more named mesh axes.
+def _deprecated(name: str):
+    warnings.warn(
+        f"collectives.{name}() is deprecated; build a "
+        f"scan_api.ScanSpec and call scan_api.scan(x, spec) instead",
+        DeprecationWarning, stacklevel=3)
 
-    Compatibility wrapper: equivalent to
-    ``scan(x, ScanSpec(kind="exclusive", monoid=m, algorithm=algorithm,
-    axis_name=axis_name))``.
+
+def exscan(x, axis_name, m="add", algorithm: str = "123"):
+    """DEPRECATED: exclusive prefix scan along named mesh axes.
+
+    Equivalent to ``scan(x, ScanSpec(kind="exclusive", monoid=m,
+    algorithm=algorithm, axis_name=axis_name))`` — build the
+    :class:`ScanSpec` yourself; this wrapper emits a
+    ``DeprecationWarning``.
 
     Args:
       x: pytree of arrays (the per-rank input vector V_r).
@@ -439,19 +120,22 @@ def exscan(x, axis_name, m="add", algorithm: str = "123"):
     Returns:
       The exclusive prefix ⊕_{i<r} V_i; rank 0 gets the identity.
     """
+    _deprecated("exscan")
     return scan(x, ScanSpec(kind="exclusive", monoid=monoid_lib.get(m),
                             algorithm=algorithm, axis_name=axis_name))
 
 
 def inclusive_scan(x, axis_name: str, m="add"):
-    """Hillis-Steele inclusive scan: ceil(log2 p) rounds, one ⊕ each."""
+    """DEPRECATED: Hillis-Steele inclusive scan (use a ScanSpec)."""
+    _deprecated("inclusive_scan")
     return scan(x, ScanSpec(kind="inclusive", monoid=monoid_lib.get(m),
                             algorithm="hillis_steele",
                             axis_name=axis_name))
 
 
 def allreduce(x, axis_name: str, m="add"):
-    """Butterfly all-reduce under an arbitrary monoid (rank-ordered)."""
+    """DEPRECATED: butterfly all-reduce (use a ScanSpec)."""
+    _deprecated("allreduce")
     return scan(x, ScanSpec(kind="allreduce", monoid=monoid_lib.get(m),
                             algorithm="butterfly", axis_name=axis_name))
 
@@ -466,12 +150,14 @@ rounds_two_op = oracle.rounds_two_op
 
 
 def expected_rounds(algorithm: str, p: int) -> int:
-    """ppermute rounds of an exclusive algorithm, from the registry.
+    """ppermute rounds of an exclusive algorithm (at S=1), from the
+    registered schedule.
 
     Legacy exception: ``"native"`` reports 1 (its single all-gather)
-    rather than the registry's 0 ppermutes, preserving the historical
+    rather than the schedule's 0 ppermutes, preserving the historical
     convention of this helper.
     """
     if algorithm == "native":
         return 1  # one all-gather (but p·m bytes), zero ppermutes
-    return scan_api.get_algorithm("exclusive", algorithm).rounds(p)
+    return scan_api.get_algorithm("exclusive", algorithm).schedule(
+        p).rounds

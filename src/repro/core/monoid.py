@@ -37,6 +37,18 @@ class Monoid:
         (1.0 = elementwise add).  Feeds the γ term of the scan planner's
         cost model (scan_api.CostModel) — "expensive" operators push the
         planner toward ⊕-frugal algorithms like 123-doubling.
+      segmentable: whether ⊕ combines aligned element positions
+        independently, so the pipelined ring may split flattened
+        payload leaves into contiguous blocks (core/schedule.py
+        ``segment``).  True for elementwise ops (including affine,
+        which is elementwise across its aligned (a, b) leaves); False
+        when a leaf is one indivisible operand (matmul's (n, n)
+        matrices contract across elements).
+      leaf_op: the per-leaf elementwise ⊕, when one exists — the hook
+        the Pallas executor lowers through the on-chip block-combine
+        kernel.  None for structured monoids (affine's two leaves
+        combine differently; matmul contracts) — those fall back to
+        ``op``.
     """
 
     name: str
@@ -44,6 +56,8 @@ class Monoid:
     identity_like: Callable[[Any], Any]
     commutative: bool = False
     op_cost: float = 1.0
+    segmentable: bool = True
+    leaf_op: Callable | None = None
 
     def fold(self, items):
         """Left fold; returns identity_like(items[0]) for empty input."""
@@ -94,6 +108,7 @@ ADD = Monoid(
     op=lambda lo, hi: jax.tree.map(jnp.add, lo, hi),
     identity_like=_zeros_like,
     commutative=True,
+    leaf_op=jnp.add,
 )
 
 MUL = Monoid(
@@ -101,6 +116,7 @@ MUL = Monoid(
     op=lambda lo, hi: jax.tree.map(jnp.multiply, lo, hi),
     identity_like=_ones_like,
     commutative=True,
+    leaf_op=jnp.multiply,
 )
 
 MAX = Monoid(
@@ -108,6 +124,7 @@ MAX = Monoid(
     op=lambda lo, hi: jax.tree.map(jnp.maximum, lo, hi),
     identity_like=_max_identity,
     commutative=True,
+    leaf_op=jnp.maximum,
 )
 
 MIN = Monoid(
@@ -115,6 +132,7 @@ MIN = Monoid(
     op=lambda lo, hi: jax.tree.map(jnp.minimum, lo, hi),
     identity_like=_min_identity,
     commutative=True,
+    leaf_op=jnp.minimum,
 )
 
 XOR = Monoid(
@@ -122,6 +140,7 @@ XOR = Monoid(
     op=lambda lo, hi: jax.tree.map(jnp.bitwise_xor, lo, hi),
     identity_like=_zeros_like,
     commutative=True,
+    leaf_op=jnp.bitwise_xor,
 )
 
 
@@ -176,6 +195,9 @@ MATMUL = Monoid(
     identity_like=_matmul_identity,
     commutative=False,
     op_cost=8.0,  # O(n) MACs per output element, nominal n=8 state
+    # a leaf is one (…, n, n) operand; splitting it breaks the
+    # contraction, so the planner never segments matmul payloads
+    segmentable=False,
 )
 
 
@@ -204,4 +226,40 @@ NUMPY_OPS: dict[str, Callable] = {
     "xor": lambda lo, hi: jax.tree.map(np.bitwise_xor, lo, hi),
     "affine": lambda lo, hi: (hi[0] * lo[0], hi[0] * lo[1] + hi[1]),
     "matmul": lambda lo, hi: jax.tree.map(lambda l, h: h @ l, lo, hi),
+}
+
+
+def _np_extreme_identity(is_max: bool):
+    def f(x):
+        def one(t):
+            t = np.asarray(t)
+            if np.issubdtype(t.dtype, np.floating):
+                return np.full_like(t, -np.inf if is_max else np.inf)
+            lim = np.iinfo(t.dtype)
+            return np.full_like(t, lim.min if is_max else lim.max)
+
+        return jax.tree.map(one, x)
+
+    return f
+
+
+def _np_matmul_identity(x):
+    def one(t):
+        t = np.asarray(t)
+        eye = np.eye(t.shape[-1], dtype=t.dtype)
+        return np.broadcast_to(eye, t.shape).copy()
+
+    return jax.tree.map(one, x)
+
+
+# Numpy identity twins (schedule.SimulatorExecutor — no jax arrays).
+NUMPY_IDENTITY: dict[str, Callable] = {
+    "add": lambda x: jax.tree.map(lambda t: np.zeros_like(t), x),
+    "mul": lambda x: jax.tree.map(lambda t: np.ones_like(t), x),
+    "max": _np_extreme_identity(True),
+    "min": _np_extreme_identity(False),
+    "xor": lambda x: jax.tree.map(lambda t: np.zeros_like(t), x),
+    "affine": lambda x: (np.ones_like(np.asarray(x[0])),
+                         np.zeros_like(np.asarray(x[1]))),
+    "matmul": _np_matmul_identity,
 }

@@ -15,12 +15,18 @@ strings at every call site, callers describe *what* they need with a
     pl = plan(spec, p=256, nbytes=64)  # inspectable, before any tracing
     pl.algorithm, pl.rounds, pl.op_applications, pl.bytes_on_wire
 
-Algorithm implementations (in :mod:`repro.core.collectives`) register
-themselves with :func:`register_algorithm`, carrying their theoretical
-round/⊕/byte costs from :mod:`repro.core.oracle`, so a ``ScanPlan``
-predicts the exact ``collect_stats()`` measurements of the traced
-program — a property the test suite asserts for every registered
-algorithm.
+Algorithms register *schedule builders* (:mod:`repro.core.schedule`)
+with :func:`register_algorithm`: every registered algorithm builds an
+explicit :class:`~repro.core.schedule.Schedule` — per-round peer
+offsets, masks, combine directions — and the planner derives its
+predicted round/⊕/all-gather counts by counting that IR.  Because the
+executors run the same IR, a ``ScanPlan`` predicts the exact
+``collect_stats()`` measurements of the program that runs — a property
+the test suite asserts for every registered algorithm.  Plans are
+executable and inspectable: ``plan.schedule()`` lists the rounds
+without tracing, ``plan.execute(x)`` runs under ``shard_map``, and
+``plan.lower(executor)`` retargets the same schedule at the SPMD,
+numpy-simulator or Pallas executor.
 
 ``algorithm="auto"`` minimizes the α·rounds + β·bytes + γ·ops model of
 :class:`CostModel` (per-axis interconnect tiers via ``launch.mesh
@@ -37,13 +43,13 @@ from __future__ import annotations
 import contextlib
 import dataclasses
 import functools
-import math
 import threading
 from typing import Any, Callable
 
 import numpy as np
 
 from repro.core import monoid as monoid_lib
+from repro.core import schedule as schedule_lib
 
 
 # ---------------------------------------------------------------------------
@@ -110,39 +116,50 @@ def _resolve_cm(cm, axis_name) -> CostModel:
 # ---------------------------------------------------------------------------
 
 
+# The planner only considers power-of-two segment counts (exact byte
+# prediction for power-of-two payloads, bounded padding) up to this cap
+# (keeps the unrolled round count of traced segmented rings sane).
+MAX_SEGMENTS = 64
+
+
 @dataclasses.dataclass(frozen=True)
 class ScanAlgorithm:
-    """A registered scan implementation plus its theoretical costs.
+    """A registered scan algorithm: a schedule builder plus metadata.
 
-    The count functions take the axis size ``p`` and must predict the
-    ``collect_stats()`` measurements of the traced implementation
-    exactly (tests enforce this for p in 2..17):
+    ``build(p)`` (or ``build(p, segments)`` when ``segmentable``)
+    returns the :class:`~repro.core.schedule.Schedule` the executors
+    run.  Rounds / ⊕ / all-gather predictions are *counted off that
+    IR*, so plans match ``collect_stats()`` measurements by
+    construction (tests still enforce this for p in 2..17).
 
-      rounds:          ppermute communication rounds.
-      op_applications: per-device ⊕ executions.
-      allgathers:      XLA-native all-gather calls.
+    Cost-model inputs derived per (p, m, S):
 
-    The byte/latency functions feed the cost model only:
-
-      latency_hops(p):        one-ported hops on the critical path
-                              (defaults to rounds + (p-1)·allgathers —
-                              all-gathers are ring-based on tori).
-      wire_bytes(p, m):       total bytes through each device's port
-                              (defaults to rounds·m + allgathers·p·m).
-      serial_bytes(p, m):     bandwidth-critical-path bytes; pipelined
-                              algorithms get credit here (defaults to
-                              wire_bytes).
+      latency_hops:  rounds + (p−1)·allgathers (all-gathers are
+                     ring-based on torus interconnects).
+      wire_bytes:    rounds·ceil(m/S) + allgathers·p·m — the bytes
+                     through each device's port; for the segmented ring
+                     this IS the serialized critical path, which is how
+                     pipelining earns its large-m win honestly.
     """
 
     name: str
     kind: str  # "exclusive" | "inclusive" | "allreduce"
-    fn: Callable[[Any, str, monoid_lib.Monoid], Any]
-    rounds: Callable[[int], int]
-    op_applications: Callable[[int], int]
-    allgathers: Callable[[int], int]
-    latency_hops: Callable[[int], int]
-    wire_bytes: Callable[[int, int], float]
-    serial_bytes: Callable[[int, int], float]
+    build: Callable[..., "schedule_lib.Schedule"]
+    segmentable: bool = False
+
+    def schedule(self, p: int,
+                 segments: int = 1) -> "schedule_lib.Schedule":
+        return _build_cached(self, int(p), int(segments))
+
+
+@functools.lru_cache(maxsize=4096)
+def _build_cached(algo: ScanAlgorithm, p: int, segments: int):
+    if algo.segmentable:
+        return algo.build(p, segments)
+    if segments != 1:
+        raise ValueError(
+            f"algorithm {algo.name!r} does not support segmentation")
+    return algo.build(p)
 
 
 _REGISTRY: dict[tuple[str, str], ScanAlgorithm] = {}
@@ -151,37 +168,29 @@ KINDS = ("exclusive", "inclusive", "allreduce")
 
 
 def register_algorithm(name: str, *, kind: str,
-                       rounds: Callable[[int], int],
-                       ops: Callable[[int], int],
-                       allgathers: Callable[[int], int] | None = None,
-                       latency_hops: Callable[[int], int] | None = None,
-                       wire_bytes: Callable[[int, int], float] | None = None,
-                       serial_bytes: Callable[[int, int], float] | None = None):
-    """Class decorator registering a scan implementation with its costs.
+                       segmentable: bool = False):
+    """Decorator registering a schedule builder as a scan algorithm.
 
     Usage (collectives.py)::
 
-        @register_algorithm("123", kind="exclusive", rounds=oracle.q_123,
-                            ops=lambda p: 0 if p <= 2 else oracle.q_123(p))
-        def exscan_123(x, axis_name, m): ...
+        register_algorithm("123", kind="exclusive")(schedule.build_123)
+        register_algorithm("ring", kind="exclusive",
+                           segmentable=True)(schedule.build_ring)
+
+    ``segmentable`` builders take ``(p, segments)`` and must honour the
+    p−2+S pipelined round structure the planner prices.
     """
     if kind not in KINDS:
         raise ValueError(f"kind must be one of {KINDS}, got {kind!r}")
-    ag = allgathers or (lambda p: 0)
-    hops = latency_hops or (lambda p: rounds(p) + (p - 1) * ag(p))
-    wire = wire_bytes or (lambda p, m: rounds(p) * m + ag(p) * p * m)
-    serial = serial_bytes or wire
 
-    def deco(fn):
+    def deco(build):
         key = (kind, name)
         if key in _REGISTRY:
             raise ValueError(f"algorithm {name!r} already registered "
                              f"for kind {kind!r}")
         _REGISTRY[key] = ScanAlgorithm(
-            name=name, kind=kind, fn=fn, rounds=rounds,
-            op_applications=ops, allgathers=ag, latency_hops=hops,
-            wire_bytes=wire, serial_bytes=serial)
-        return fn
+            name=name, kind=kind, build=build, segmentable=segmentable)
+        return build
 
     return deco
 
@@ -228,6 +237,10 @@ class ScanSpec:
         row-major over the tuple).  May be None for pure planning math.
       payload_bytes: per-rank message size hint m, used by ``plan``
         when no concrete operand is available yet.
+      segments: pin the payload segment count S of segmentable
+        algorithms (the pipelined ring); None lets the planner pick S
+        from the α/β trade-off.  Non-segmentable algorithms and monoids
+        always run S=1.
     """
 
     kind: str = "exclusive"
@@ -235,6 +248,7 @@ class ScanSpec:
     algorithm: str = "auto"
     axis_name: Any = None
     payload_bytes: int | None = None
+    segments: int | None = None
 
     def __post_init__(self):
         if self.kind not in KINDS:
@@ -274,9 +288,16 @@ class ScanPlan:
     ``rounds``/``op_applications``/``allgathers`` predict exactly what
     ``collectives.collect_stats()`` measures when the plan is executed.
     ``bytes_on_wire`` is the total bytes through each device's port for
-    the planned payload.  Multi-axis scans carry ``sub_plans``
-    (inner exscan, minor-axis allreduce, outer exscan) and one extra
-    combining ⊕ at the top level.
+    the planned payload (for the segmented ring: rounds·ceil(m/S), the
+    pipelined serialization).  ``segments`` is the planner-chosen (or
+    spec-pinned) payload segment count S.  Multi-axis scans carry
+    ``sub_plans`` (inner exscan, minor-axis allreduce, outer exscan)
+    and one extra combining ⊕ at the top level.
+
+    A plan is executable: ``schedule()`` returns the round-by-round IR
+    (no tracing), ``execute(x)`` runs it (default: the SPMD executor,
+    inside ``shard_map``), ``lower(executor)`` binds a different
+    backend (numpy simulator, Pallas combine).
     """
 
     spec: ScanSpec
@@ -289,12 +310,39 @@ class ScanPlan:
     bytes_on_wire: float
     cost: float  # cost-model seconds estimate
     cost_model: CostModel
+    segments: int = 1
     sub_plans: tuple = ()
+
+    def schedule(self) -> "schedule_lib.Schedule":
+        """The executable round-by-round IR of this plan (cached)."""
+        if self.sub_plans:
+            raise ValueError(
+                "multi-axis plans have no single schedule; inspect "
+                "plan.sub_plans[i].schedule()")
+        return get_algorithm(self.spec.kind, self.algorithm).schedule(
+            self.p, self.segments)
+
+    def execute(self, x, *, executor=None):
+        """Run this plan on pytree ``x``.
+
+        With the default (SPMD) executor this must be called inside
+        ``shard_map`` with the spec's axis names bound.  Pass a
+        :class:`~repro.core.schedule.SimulatorExecutor` to execute
+        host-side numpy arrays with a leading rank axis instead.
+        """
+        m = monoid_lib.get(self.spec.monoid)
+        return _run_plan(self, x, m, executor)
+
+    def lower(self, executor=None) -> Callable:
+        """A callable ``x -> result`` bound to ``executor`` (None: the
+        SPMD ppermute executor over the spec's axis)."""
+        return functools.partial(self.execute, executor=executor)
 
     def describe(self) -> str:
         """Human-readable one-liner (benchmarks print these)."""
+        seg = f" S={self.segments}" if self.segments != 1 else ""
         head = (f"{self.spec.kind} scan over p={self.p} "
-                f"[{self.algorithm}] rounds={self.rounds} "
+                f"[{self.algorithm}{seg}] rounds={self.rounds} "
                 f"ops={self.op_applications} "
                 f"allgathers={self.allgathers} "
                 f"wire={self.bytes_on_wire:.0f}B "
@@ -310,32 +358,68 @@ def _monoid_name_and_cost(monoid) -> tuple[str, float]:
 
 
 def _plan_single(spec: ScanSpec, p: int, nbytes: int, cm) -> ScanPlan:
-    """Plan one axis: resolve "auto" by cost, fill predicted counts."""
+    """Plan one axis: resolve "auto" by cost, fill predicted counts.
+
+    For segmentable algorithms (the pipelined ring) the segment count S
+    is part of the optimization: candidates are power-of-two S up to
+    ``MAX_SEGMENTS`` (and no finer than one byte per segment), each
+    priced at α·(p−2+S) + β·(p−2+S)·⌈m/S⌉ + γ·ops·⌈m/S⌉ — the α/β
+    trade-off of the paper's large-m pipelining citation.
+    """
     cm = _resolve_cm(cm, spec.axes[-1])
     _, op_cost = _monoid_name_and_cost(spec.monoid)
+    mono = monoid_lib.get(spec.monoid)
 
-    def one(algo: ScanAlgorithm) -> ScanPlan:
+    def one(algo: ScanAlgorithm, S: int) -> ScanPlan:
+        sched = algo.schedule(p, S)
+        rounds = sched.rounds
+        ops = sched.op_applications
+        ag = sched.allgathers
+        seg_bytes = -(-nbytes // S) if nbytes else 0
+        wire = rounds * seg_bytes + ag * p * nbytes
         return ScanPlan(
             spec=spec, p=p, algorithm=algo.name, payload_bytes=nbytes,
-            rounds=algo.rounds(p), op_applications=algo.op_applications(p),
-            allgathers=algo.allgathers(p),
-            bytes_on_wire=algo.wire_bytes(p, nbytes),
-            cost=cm.cost(hops=algo.latency_hops(p),
-                         serial_bytes=algo.serial_bytes(p, nbytes),
-                         ops=algo.op_applications(p),
-                         payload_bytes=nbytes, op_cost=op_cost),
-            cost_model=cm)
+            rounds=rounds, op_applications=ops, allgathers=ag,
+            bytes_on_wire=wire,
+            cost=cm.cost(hops=rounds + (p - 1) * ag,
+                         serial_bytes=wire, ops=ops,
+                         payload_bytes=seg_bytes, op_cost=op_cost),
+            cost_model=cm, segments=S)
 
-    if spec.algorithm != "auto":
-        return one(get_algorithm(spec.kind, spec.algorithm))
+    def candidates(algo: ScanAlgorithm) -> list[ScanPlan]:
+        if not (algo.segmentable and mono.segmentable):
+            if spec.segments not in (None, 1) and spec.algorithm != "auto":
+                raise ValueError(
+                    f"algorithm {algo.name!r} (monoid "
+                    f"{mono.name!r}) does not support segmentation; "
+                    f"got segments={spec.segments}")
+            return [one(algo, 1)]
+        if spec.segments is not None:
+            # pins are honoured verbatim; an S beyond the payload's
+            # element count degenerates to 1-element segments (measured
+            # bytes exceed the ceil(m/S) prediction)
+            return [one(algo, max(1, int(spec.segments)))]
+        # segments cannot be finer than one element; the planner only
+        # knows bytes, so cap S at nbytes/8 (the largest itemsize) to
+        # keep the predicted ceil(m/S) above the achievable floor
+        ss, s = [], 1
+        while s <= min(MAX_SEGMENTS, max(1, nbytes // 8)):
+            ss.append(s)
+            s *= 2
+        return [one(algo, s) for s in ss]
+
     _ensure_registered()
-    candidates = [a for (k, _), a in sorted(_REGISTRY.items())
-                  if k == spec.kind]
-    if not candidates:
-        raise ValueError(f"no algorithms registered for {spec.kind!r}")
-    # deterministic tie-break: lowest cost, then fewest rounds, name
-    plans = [one(a) for a in candidates]
-    return min(plans, key=lambda pl: (pl.cost, pl.rounds, pl.algorithm))
+    if spec.algorithm != "auto":
+        algos = [get_algorithm(spec.kind, spec.algorithm)]
+    else:
+        algos = [a for (k, _), a in sorted(_REGISTRY.items())
+                 if k == spec.kind]
+        if not algos:
+            raise ValueError(f"no algorithms registered for {spec.kind!r}")
+    # deterministic tie-break: cost, then rounds, name, fewest segments
+    plans = [pl for a in algos for pl in candidates(a)]
+    return min(plans, key=lambda pl: (pl.cost, pl.rounds, pl.algorithm,
+                                      pl.segments))
 
 
 @functools.lru_cache(maxsize=1024)
@@ -419,29 +503,37 @@ def _tree_nbytes(tree) -> int:
                for x in jax.tree.leaves(tree))
 
 
-def _run_plan(pl: ScanPlan, x, m: monoid_lib.Monoid):
+def _run_plan(pl: ScanPlan, x, m: monoid_lib.Monoid, executor=None):
     if pl.sub_plans:
-        from repro.core import collectives
-
+        if executor is not None:
+            raise ValueError(
+                "multi-axis plans execute with the default SPMD "
+                "executor only; run sub_plans individually to use a "
+                "different executor")
         inner_pl, reduce_pl, outer_pl = pl.sub_plans
         inner = _run_plan(inner_pl, x, m)
         total = _run_plan(reduce_pl, x, m)
         outer = _run_plan(outer_pl, total, m)
         combined = m.op(outer, inner)
-        collectives._record_op()
+        schedule_lib._record_op()
         return combined
-    algo = get_algorithm(pl.spec.kind, pl.algorithm)
-    axis = pl.spec.axes[-1] if len(pl.spec.axes) == 1 else pl.spec.axes
-    return algo.fn(x, axis, m)
+    if executor is None:
+        executor = schedule_lib.SPMDExecutor(pl.spec.axes[-1])
+    return executor.execute(pl.schedule(), x, m)
 
 
-def scan(x, spec: ScanSpec, *, cost_model=None):
+def scan(x, spec: ScanSpec, *, cost_model=None, executor=None):
     """Execute ``spec`` on pytree ``x`` along its named mesh axes.
 
     Must be called inside ``shard_map`` (or wherever the axis names are
     bound).  Resolves a :class:`ScanPlan` first — with the payload size
-    taken from ``x`` itself — then runs it; ``algorithm="auto"`` specs
-    therefore adapt per call site to the actual message size.
+    taken from ``x`` itself — then runs the plan's schedule;
+    ``algorithm="auto"`` specs therefore adapt per call site to the
+    actual message size (including the ring's segment count S).
+
+    ``executor`` overrides the backend for single-axis specs (e.g.
+    :class:`~repro.core.schedule.PallasExecutor` to run each round's ⊕
+    through the on-chip block-combine kernel).
     """
     _ensure_registered()
     from jax import lax
@@ -453,7 +545,7 @@ def scan(x, spec: ScanSpec, *, cost_model=None):
     ps = tuple(lax.axis_size(a) for a in spec.axes)
     pl = plan(spec, ps if len(ps) > 1 else ps[0],
               nbytes=_tree_nbytes(x), cost_model=cost_model)
-    return _run_plan(pl, x, m)
+    return _run_plan(pl, x, m, executor)
 
 
 # ---------------------------------------------------------------------------

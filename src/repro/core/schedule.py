@@ -1,0 +1,790 @@
+"""Executable schedule IR for scan plans (DESIGN.md §7).
+
+A :class:`Schedule` is the explicit, inspectable program of a scan
+algorithm: a sequence of :class:`RoundStep`s — peer offsets for the
+``ppermute`` of each simultaneous send-receive round, SPMD receive
+masks, the ⊕ combine direction, identity fixups — over per-rank payload
+:class:`Segment`s.  Registered algorithms *build* schedules
+(``build_123`` …), the planner derives its predicted round/⊕/all-gather
+counts by counting the IR, and three executors run the same schedule:
+
+  * :class:`SPMDExecutor` — one ``lax.ppermute`` per round inside
+    ``shard_map`` (what ``scan_api.scan`` runs on a mesh);
+  * :class:`SimulatorExecutor` — pure-numpy, rank-by-rank lockstep
+    execution at any p with no devices (dry-run plan verification,
+    benchmark drift checks, property tests);
+  * :class:`PallasExecutor` — the SPMD executor with the per-round ⊕
+    combine hook lowered through the on-chip Pallas block-combine
+    kernel (``kernels/blelloch_exscan.block_combine``).
+
+Because the planner's counts and the executors consume the *same* IR,
+``ScanPlan`` predictions equal ``collect_stats()`` measurements by
+construction — the IR is the single source of truth for what runs.
+
+Payload segmentation is a schedule transform: :func:`segment` turns the
+p−1-round neighbour ring into the paper's pipelined fixed-degree
+algorithm — each leaf is flattened and split into S contiguous element
+blocks and the per-segment running prefixes streamed through p−2+S
+neighbour rounds, so each round carries m/S bytes
+(~(1 + (p−2)/S)·m serialized instead of (p−1)·m).
+
+Byte prediction note: the plan's ``bytes_on_wire`` for a segmented
+schedule is ``rounds · ceil(m/S)``; the traced program zero-pads each
+flattened leaf up to a multiple of S, so prediction and measurement
+agree exactly when S divides every leaf's element count (the planner
+only considers power-of-two S, which also keeps the padding bounded).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.core import monoid as monoid_lib
+from repro.core import oracle
+
+
+# ---------------------------------------------------------------------------
+# Trace/execution-time instrumentation.  Both the SPMD executor (at trace
+# time) and the numpy simulator (at execution time) record rounds, ⊕
+# applications and all-gathers here, so tests and benchmarks can assert
+# the planner's predicted costs on the program that actually runs.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    rounds: int = 0  # ppermute calls (communication rounds)
+    op_applications: int = 0  # ⊕ applications per device (SPMD lockstep)
+    allgathers: int = 0
+    bytes_per_round: list = dataclasses.field(default_factory=list)
+
+
+_tls = threading.local()
+
+
+@contextlib.contextmanager
+def collect_stats():
+    """Context manager capturing round/op counts of scans traced (SPMD)
+    or executed (simulator) inside."""
+    stats = CollectiveStats()
+    prev = getattr(_tls, "stats", None)
+    _tls.stats = stats
+    try:
+        yield stats
+    finally:
+        _tls.stats = prev
+
+
+def _stats() -> CollectiveStats | None:
+    return getattr(_tls, "stats", None)
+
+
+def _nbytes(tree) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(tree))
+
+
+def _record_round(tree):
+    s = _stats()
+    if s is not None:
+        s.rounds += 1
+        s.bytes_per_round.append(_nbytes(tree))
+
+
+def _record_op(n: int = 1):
+    """Count n ⊕ *executions* (a traced-once loop body records its trip
+    count, so stats mean executions, not trace sites)."""
+    s = _stats()
+    if s is not None:
+        s.op_applications += n
+
+
+def _record_allgather():
+    s = _stats()
+    if s is not None:
+        s.allgathers += 1
+
+
+# ---------------------------------------------------------------------------
+# The IR
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Segment:
+    """One of S contiguous blocks of the flattened per-rank payload.
+
+    Each leaf is flattened and zero-padded to a multiple of ``count``;
+    block ``index`` holds elements [index·k, (index+1)·k) with
+    k = ceil(size/count).  ⊕ must combine aligned element blocks
+    independently for this to be sound (``Monoid.segmentable``)."""
+
+    index: int
+    count: int
+
+
+@dataclasses.dataclass(frozen=True)
+class RoundStep:
+    """One round of a schedule.
+
+    kind:
+      "shift"     — ppermute r → r+skip; masked receive; combine.
+      "seg_shift" — pipelined-ring round ``t``: neighbour ppermute of
+                    one payload segment; rank r stores received segment
+                    s = t+1−r (when 0 ≤ s < S) as its result and, if
+                    ``prep``, forwards recv ⊕ V[s] next round (1 ⊕).
+      "exchange"  — butterfly ppermute r ↔ r^skip; two order-preserving
+                    combines selected by the rank's side bit.
+      "allgather" — XLA-native all-gather of the input V.
+      "fold"      — local left-fold of the gathered values below own
+                    rank (``fold_count`` ⊕ executions).
+      "bcast"     — broadcast rank ``root``'s value (via all-gather).
+
+    send (shift only): "x" the input V, "w" the accumulator,
+      "w_op_x" the prepared W ⊕ V (counts one ⊕).
+    mask/bound (shift only): receive participation — "ge": r ≥ bound,
+      "gt": r > bound.  Non-participants keep W (identity fixup).
+    combine (shift only): "copy" W ← recv, or "op" W ← recv ⊕ W (the
+      recv side always covers lower ranks — non-commutative safe).
+    """
+
+    kind: str
+    skip: int = 0
+    send: str = "w"
+    mask: str = "ge"
+    bound: int = 0
+    combine: str = "none"
+    t: int = -1  # seg_shift round index
+    prep: bool = False  # seg_shift: forward-prep ⊕ this round
+    fold_count: int = 0  # fold: ⊕ executions
+    root: int = 0  # bcast source rank
+
+    @property
+    def is_round(self) -> bool:
+        """Does this step cost one ppermute communication round?"""
+        return self.kind in ("shift", "seg_shift", "exchange")
+
+    @property
+    def ops(self) -> int:
+        """⊕ executions per device (SPMD lockstep) for this step."""
+        n = 0
+        if self.kind == "shift":
+            n += 1 if self.send == "w_op_x" else 0
+            n += 1 if self.combine == "op" else 0
+        elif self.kind == "seg_shift":
+            n += 1 if self.prep else 0
+        elif self.kind == "exchange":
+            n += 2
+        elif self.kind == "fold":
+            n += self.fold_count
+        return n
+
+    def describe(self) -> str:
+        if self.kind == "shift":
+            send = {"x": "V", "w": "W", "w_op_x": "W⊕V"}[self.send]
+            cmp_ = {"ge": ">=", "gt": ">"}[self.mask]
+            comb = "W←recv" if self.combine == "copy" else "W←recv⊕W"
+            return (f"shift +{self.skip:<4d} send={send:<4s} "
+                    f"recv r{cmp_}{self.bound}  {comb}")
+        if self.kind == "seg_shift":
+            tail = "; send←recv⊕V[s]" if self.prep else "  (drain)"
+            return f"ring  t={self.t:<3d} seg s=t+1−r  W[s]←recv{tail}"
+        if self.kind == "exchange":
+            return f"xchg  r↔r^{self.skip}  W←ordered(recv,W)"
+        if self.kind == "allgather":
+            return "all-gather V"
+        if self.kind == "fold":
+            return f"local fold of {self.fold_count + 1} gathered values"
+        if self.kind == "bcast":
+            return f"broadcast rank {self.root} (all-gather)"
+        return self.kind
+
+
+@dataclasses.dataclass(frozen=True)
+class Schedule:
+    """An executable scan program: init state + ordered RoundSteps."""
+
+    algorithm: str
+    kind: str  # "exclusive" | "inclusive" | "allreduce"
+    p: int
+    init: str = "identity"  # initial accumulator W: "identity" | "x"
+    segments: tuple[Segment, ...] = (Segment(0, 1),)
+    steps: tuple[RoundStep, ...] = ()
+
+    @property
+    def n_segments(self) -> int:
+        return len(self.segments)
+
+    @property
+    def rounds(self) -> int:
+        return sum(1 for s in self.steps if s.is_round)
+
+    @property
+    def op_applications(self) -> int:
+        return sum(s.ops for s in self.steps)
+
+    @property
+    def allgathers(self) -> int:
+        return sum(1 for s in self.steps
+                   if s.kind in ("allgather", "bcast"))
+
+    def describe(self) -> str:
+        """Round-by-round human-readable listing (no tracing needed)."""
+        head = (f"{self.kind} [{self.algorithm}] p={self.p} "
+                f"S={self.n_segments} rounds={self.rounds} "
+                f"⊕={self.op_applications} "
+                f"allgathers={self.allgathers} (W₀={self.init})")
+        lines = [head]
+        rnd = 0
+        for st in self.steps:
+            tag = f"r{rnd}" if st.is_round else "--"
+            rnd += 1 if st.is_round else 0
+            lines.append(f"  {tag:>4s}: {st.describe()}")
+        return "\n".join(lines)
+
+
+def _segs(S: int) -> tuple[Segment, ...]:
+    return tuple(Segment(i, S) for i in range(S))
+
+
+# ---------------------------------------------------------------------------
+# Builders: one per registered algorithm.  The planner counts rounds/⊕/
+# all-gathers off these schedules, so by construction plans predict what
+# the executors measure.
+# ---------------------------------------------------------------------------
+
+
+def build_123(p: int) -> Schedule:
+    """Algorithm 1 (123-doubling): skip schedule 1, 2, 3·2^(k−2);
+    q = ⌈log₂(p−1)+log₂(4/3)⌉ rounds, q−1 result-path ⊕."""
+    steps: list[RoundStep] = []
+    if p >= 2:
+        steps.append(RoundStep("shift", skip=1, send="x", mask="ge",
+                               bound=1, combine="copy"))
+    if p >= 3:
+        # Round 1 (skip 2): send W ⊕ V (rank 0's W is the identity, so
+        # it sends plain V exactly as in the paper); combine iff r >= 2.
+        steps.append(RoundStep("shift", skip=2, send="w_op_x", mask="ge",
+                               bound=2, combine="op"))
+        for s in oracle.skips_123(p)[2:]:
+            # rank complete once its window bottoms out (paper: 0 < f)
+            steps.append(RoundStep("shift", skip=s, send="w", mask="gt",
+                                   bound=s, combine="op"))
+    return Schedule("123", "exclusive", p, steps=tuple(steps))
+
+
+def build_1doubling(p: int) -> Schedule:
+    """Shift + straight doubling: 1 + ⌈log₂(p−1)⌉ rounds."""
+    steps: list[RoundStep] = []
+    if p >= 2:
+        steps.append(RoundStep("shift", skip=1, send="x", mask="ge",
+                               bound=1, combine="copy"))
+        for s in oracle.skips_1doubling(p)[1:]:
+            steps.append(RoundStep("shift", skip=s, send="w", mask="gt",
+                                   bound=s, combine="op"))
+    return Schedule("1doubling", "exclusive", p, steps=tuple(steps))
+
+
+def build_two_op(p: int) -> Schedule:
+    """Two-⊕ doubling: ⌈log₂ p⌉ rounds, two ⊕ per round after the first."""
+    steps: list[RoundStep] = []
+    if p >= 2:
+        steps.append(RoundStep("shift", skip=1, send="x", mask="ge",
+                               bound=1, combine="copy"))
+        k = 1
+        while (1 << k) < p:
+            s = 1 << k
+            steps.append(RoundStep("shift", skip=s, send="w_op_x",
+                                   mask="ge", bound=s, combine="op"))
+            k += 1
+    return Schedule("two_op", "exclusive", p, steps=tuple(steps))
+
+
+def build_native(p: int) -> Schedule:
+    """Library baseline: all-gather everyone's V, fold locally below own
+    rank — zero ppermutes but p·m wire bytes and p−1 local ⊕."""
+    steps: tuple[RoundStep, ...] = ()
+    if p >= 2:
+        steps = (RoundStep("allgather"),
+                 RoundStep("fold", fold_count=p - 1))
+    return Schedule("native", "exclusive", p, steps=steps)
+
+
+def build_ring(p: int, segments: int = 1) -> Schedule:
+    """Pipelined segmented neighbour ring: p−2+S rounds of one
+    m/S-byte segment each (S=1: the plain p−1-round ring).
+
+    Round t: rank r receives segment s = t+1−r (its exclusive prefix
+    for that block, complete on arrival) and forwards recv ⊕ V[s] —
+    one ⊕ per non-final round, p−3+S total."""
+    S = max(1, int(segments))
+    if p <= 1:
+        return Schedule("ring", "exclusive", p, segments=_segs(S))
+    n = p - 2 + S
+    steps = tuple(RoundStep("seg_shift", skip=1, t=t, prep=(t < n - 1))
+                  for t in range(n))
+    return Schedule("ring", "exclusive", p, segments=_segs(S),
+                    steps=steps)
+
+
+def build_hillis_steele(p: int) -> Schedule:
+    """Hillis-Steele inclusive scan: ⌈log₂ p⌉ rounds, one ⊕ each."""
+    steps = tuple(RoundStep("shift", skip=s, send="w", mask="ge",
+                            bound=s, combine="op")
+                  for s in oracle.skips_two_op(p))
+    return Schedule("hillis_steele", "inclusive", p, init="x",
+                    steps=steps)
+
+
+def build_butterfly(p: int) -> Schedule:
+    """Recursive-doubling all-reduce: ⌈log₂ p⌉ exchange rounds for
+    power-of-two p; otherwise inclusive scan + broadcast of the last
+    rank (order-preserving for non-commutative monoids)."""
+    if p <= 1:
+        return Schedule("butterfly", "allreduce", p, init="x")
+    if p & (p - 1):  # non-power-of-two
+        incl = build_hillis_steele(p)
+        steps = incl.steps + (RoundStep("bcast", root=p - 1),)
+        return Schedule("butterfly", "allreduce", p, init="x",
+                        steps=steps)
+    steps = []
+    k = 0
+    while (1 << k) < p:
+        steps.append(RoundStep("exchange", skip=1 << k))
+        k += 1
+    return Schedule("butterfly", "allreduce", p, init="x",
+                    steps=tuple(steps))
+
+
+def segment(schedule: Schedule, S: int) -> Schedule:
+    """The segmentation transform: split the payload into S row-blocks
+    and stream them through p−2+S neighbour rounds.
+
+    Only schedules made of neighbour rounds (the ring) pipeline this
+    way; doubling schedules have data dependencies across non-neighbour
+    peers and raise (including their trivially-empty p <= 1 forms)."""
+    if schedule.algorithm != "ring" or not all(
+            s.kind == "seg_shift" for s in schedule.steps):
+        raise ValueError(
+            f"only neighbour-ring schedules are segmentable, "
+            f"not {schedule.algorithm!r}")
+    return build_ring(schedule.p, S)
+
+
+# ---------------------------------------------------------------------------
+# Payload segmentation helpers: each leaf is flattened and split into S
+# contiguous element blocks (sound for monoids whose ⊕ combines aligned
+# element positions independently — ``Monoid.segmentable``).
+# ---------------------------------------------------------------------------
+
+
+def _jnp_split(a, S: int):
+    """Any shape -> (S, ceil(size/S)), flattened and zero-padded."""
+    a = jnp.asarray(a).reshape(-1)
+    n = a.shape[0]
+    k = -(-n // S)
+    pad = S * k - n
+    if pad:
+        a = jnp.concatenate([a, jnp.zeros((pad,), a.dtype)])
+    return a.reshape(S, k)
+
+
+def _jnp_unsplit(seg, like):
+    n = like.size
+    return seg.reshape(-1)[:n].reshape(like.shape)
+
+
+def _np_split(a, S: int):
+    a = np.asarray(a).reshape(-1)
+    n = a.shape[0]
+    k = -(-n // S)
+    pad = S * k - n
+    if pad:
+        a = np.concatenate([a, np.zeros((pad,), a.dtype)])
+    return a.reshape(S, k)
+
+
+def _np_unsplit(seg, like):
+    like = np.asarray(like)
+    return np.asarray(seg).reshape(-1)[:like.size].reshape(like.shape)
+
+
+# ---------------------------------------------------------------------------
+# Executors
+# ---------------------------------------------------------------------------
+
+
+class Executor:
+    """One interface, three backends: ``execute(schedule, x, monoid)``.
+
+    ``combine`` is the RoundStep ⊕ hook — subclasses may lower it onto
+    different compute substrates (the Pallas executor runs it through
+    the on-chip block-combine kernel)."""
+
+    def combine(self, m: monoid_lib.Monoid, lo, hi):
+        """⊕ with ``lo`` covering the lower ranks."""
+        return m.op(lo, hi)
+
+    def execute(self, schedule: Schedule, x, m: monoid_lib.Monoid):
+        raise NotImplementedError
+
+
+def _shift_up(tree, axis_name, skip: int, p: int):
+    """One communication round: rank r sends to r+skip (r+skip < p).
+
+    Non-receiving ranks get zero-fill from ppermute; callers mask."""
+    perm = [(r, r + skip) for r in range(p - skip)]
+    _record_round(tree)
+    return jax.tree.map(lambda t: lax.ppermute(t, axis_name, perm), tree)
+
+
+def _fixup_identity(m: monoid_lib.Monoid, recv, has_src):
+    """Replace zero-fill from ppermute with the monoid identity."""
+    ident = m.identity_like(recv)
+    return jax.tree.map(
+        lambda t, i: jnp.where(has_src, t, i), recv, ident)
+
+
+class SPMDExecutor(Executor):
+    """Executes a schedule as the SPMD ppermute program of its rounds.
+
+    Must run where ``axis_name`` is bound (inside ``shard_map``).  MPI
+    rank conditionals become the schedule's receive masks: a rank with
+    no source "receives" the monoid identity, making the combine a
+    no-op (DESIGN.md §2)."""
+
+    def __init__(self, axis_name):
+        self.axis_name = axis_name
+
+    def execute(self, sched: Schedule, x, m: monoid_lib.Monoid):
+        axis = self.axis_name
+        p = sched.p
+        r = lax.axis_index(axis)
+        if any(st.kind == "seg_shift" for st in sched.steps):
+            return self._execute_segmented(sched, x, m, axis, p, r)
+        w = x if sched.init == "x" else m.identity_like(x)
+        gathered = None
+        for st in sched.steps:
+            if st.kind == "shift":
+                if st.send == "x":
+                    src = x
+                elif st.send == "w":
+                    src = w
+                else:  # "w_op_x": rank 0's W is identity -> sends V
+                    src = self.combine(m, w, x)
+                    _record_op()
+                recv = _shift_up(src, axis, st.skip, p)
+                has = (r >= st.bound) if st.mask == "ge" else \
+                    (r > st.bound)
+                recv = _fixup_identity(m, recv, has)
+                if st.combine == "op":
+                    combined = self.combine(m, recv, w)
+                    _record_op()
+                    w = jax.tree.map(
+                        lambda c, v: jnp.where(has, c, v), combined, w)
+                else:  # "copy"
+                    w = jax.tree.map(
+                        lambda c, v: jnp.where(has, c, v), recv, w)
+            elif st.kind == "exchange":
+                perm = [(i, i ^ st.skip) for i in range(p)]
+                _record_round(w)
+                recv = jax.tree.map(
+                    lambda t: lax.ppermute(t, axis, perm), w)
+                low_side = (r & st.skip) != 0  # partner is lower block
+                lo = self.combine(m, recv, w)
+                hi = self.combine(m, w, recv)
+                _record_op(2)
+                w = jax.tree.map(
+                    lambda a, b: jnp.where(low_side, a, b), lo, hi)
+            elif st.kind == "allgather":
+                _record_allgather()
+                gathered = jax.tree.map(
+                    lambda t: lax.all_gather(t, axis, axis=0), x)
+            elif st.kind == "fold":
+                ident = m.identity_like(x)
+
+                def body(i, acc):
+                    vi = jax.tree.map(lambda g: g[i], gathered)
+                    take = i < r
+                    combined = self.combine(m, acc, vi)
+                    return jax.tree.map(
+                        lambda c, a: jnp.where(take, c, a), combined,
+                        acc)
+
+                _record_op(st.fold_count)  # body executes fold_count×
+                w = lax.fori_loop(0, st.fold_count, body, ident)
+            elif st.kind == "bcast":
+                _record_allgather()
+                w = jax.tree.map(
+                    lambda t: lax.all_gather(t, axis, axis=0)[st.root],
+                    w)
+        return w
+
+    def _execute_segmented(self, sched, x, m, axis, p, r):
+        """The pipelined ring: stream S leaf row-blocks through
+        neighbour rounds; per-rank segment indices are dynamic
+        (rank r handles segment t+1−r in round t)."""
+        S = sched.n_segments
+        V = jax.tree.map(lambda a: _jnp_split(a, S), x)
+        R = m.identity_like(V)
+        cur = jax.tree.map(lambda a: a[0], V)  # rank 0 sends V[0] first
+        for st in sched.steps:
+            s_recv = st.t + 1 - r
+            valid = (r >= 1) & (s_recv >= 0) & (s_recv < S)
+            sc = jnp.clip(s_recv, 0, S - 1)
+            recv = _shift_up(cur, axis, 1, p)
+            recv = _fixup_identity(m, recv, valid)
+            # store: R[s] <- recv where the receive is in-window
+            old = jax.tree.map(
+                lambda t: lax.dynamic_slice_in_dim(t, sc, 1, 0), R)
+            upd = jax.tree.map(
+                lambda o, c: jnp.where(valid, c[None], o), old, recv)
+            R = jax.tree.map(
+                lambda t, u: lax.dynamic_update_slice_in_dim(
+                    t, u, sc, 0), R, upd)
+            if st.prep:
+                # forward Q = recv ⊕ V[s] next round (rank 0: identity
+                # fixup makes this plain V[t+1], its next raw segment)
+                v_s = jax.tree.map(
+                    lambda t: lax.dynamic_slice_in_dim(t, sc, 1, 0)[0],
+                    V)
+                cur = self.combine(m, recv, v_s)
+                _record_op()
+        return jax.tree.map(_jnp_unsplit, R, x)
+
+
+class PallasExecutor(SPMDExecutor):
+    """SPMD executor whose RoundStep ⊕ hook runs on-chip: elementwise
+    monoids (``Monoid.leaf_op``) are tiled through VMEM by the Pallas
+    block-combine kernel; structured monoids fall back to the plain op.
+
+    Note: ``shard_map`` has no replication rule for ``pallas_call`` —
+    wrap the call site with ``check_vma=False`` (``check_rep=False`` on
+    older jax)."""
+
+    def __init__(self, axis_name, *, interpret: bool | None = None,
+                 block_rows: int = 256):
+        super().__init__(axis_name)
+        self.interpret = interpret
+        self.block_rows = block_rows
+
+    def combine(self, m: monoid_lib.Monoid, lo, hi):
+        if m.leaf_op is None:
+            return super().combine(m, lo, hi)
+        from repro.kernels.blelloch_exscan import block_combine
+
+        interpret = self.interpret
+        if interpret is None:
+            interpret = jax.default_backend() != "tpu"
+        return jax.tree.map(
+            lambda a, b: block_combine(
+                a, b, m.leaf_op, block_rows=self.block_rows,
+                interpret=interpret), lo, hi)
+
+
+class SimulatorExecutor(Executor):
+    """Pure-numpy rank-by-rank execution of a schedule at any p — no
+    devices, no tracing.  Leaves carry a leading rank axis of size p.
+
+    Records the same aggregate stats as the SPMD executor into the
+    ambient :func:`collect_stats` context, so plan-vs-execution drift is
+    checkable host-side (dry-run, benchmark ``--check`` modes)."""
+
+    def execute(self, sched: Schedule, x, m: monoid_lib.Monoid):
+        p = sched.p
+        op = monoid_lib.NUMPY_OPS.get(m.name, m.op)
+        ident_fn = monoid_lib.NUMPY_IDENTITY.get(m.name)
+        if ident_fn is None:
+            def ident_fn(t):
+                return jax.tree.map(np.asarray, m.identity_like(t))
+
+        V = [jax.tree.map(lambda a: np.asarray(a)[q], x)
+             for q in range(p)]
+        if p == 0:
+            return x
+        if any(st.kind == "seg_shift" for st in sched.steps):
+            return self._execute_segmented(sched, V, op, ident_fn, x)
+        if sched.init == "x":
+            W = [jax.tree.map(np.copy, v) for v in V]
+        else:
+            W = [ident_fn(v) for v in V]
+        gathered = None
+        for st in sched.steps:
+            if st.kind == "shift":
+                if st.send == "x":
+                    payload = V
+                elif st.send == "w":
+                    payload = W
+                else:
+                    payload = [op(W[q], V[q]) for q in range(p)]
+                    _record_op()
+                _record_round(payload[0])
+                ok = (lambda q: q >= st.bound) if st.mask == "ge" else \
+                    (lambda q: q > st.bound)
+                nw = list(W)
+                for q in range(st.skip, p):
+                    if ok(q):
+                        recv = payload[q - st.skip]
+                        nw[q] = recv if st.combine == "copy" else \
+                            op(recv, W[q])
+                if st.combine == "op":
+                    _record_op()
+                W = nw
+            elif st.kind == "exchange":
+                _record_round(W[0])
+                _record_op(2)
+                W = [op(W[q ^ st.skip], W[q]) if q & st.skip
+                     else op(W[q], W[q ^ st.skip]) for q in range(p)]
+            elif st.kind == "allgather":
+                _record_allgather()
+                gathered = V
+            elif st.kind == "fold":
+                _record_op(st.fold_count)
+                nw = []
+                for q in range(p):
+                    acc = ident_fn(V[q])
+                    for i in range(q):
+                        acc = op(acc, gathered[i])
+                    nw.append(acc)
+                W = nw
+            elif st.kind == "bcast":
+                _record_allgather()
+                W = [W[st.root] for _ in range(p)]
+        return jax.tree.map(lambda *ws: np.stack(ws, axis=0), *W)
+
+    def _execute_segmented(self, sched, V, op, ident_fn, x_like):
+        p = len(V)
+        S = sched.n_segments
+        Vs = [jax.tree.map(lambda a: _np_split(a, S), v) for v in V]
+        R = [ident_fn(v) for v in Vs]
+        cur = [jax.tree.map(lambda a: a[0].copy(), v) for v in Vs]
+        seg_of = (lambda v, s: jax.tree.map(lambda a: a[s], v))
+        for st in sched.steps:
+            _record_round(cur[0])
+            recv = [None] + cur[:-1]  # neighbour shift r-1 -> r
+            if st.prep:
+                _record_op()
+            ncur = list(cur)
+            for q in range(p):
+                s = st.t + 1 - q
+                valid = q >= 1 and 0 <= s < S
+                sc = min(max(s, 0), S - 1)
+                base = recv[q] if valid else ident_fn(seg_of(Vs[q], sc))
+                if valid:
+                    R[q] = jax.tree.map(
+                        lambda acc, b: _np_set_seg(acc, sc, b),
+                        R[q], base)
+                if st.prep:
+                    ncur[q] = op(base, seg_of(Vs[q], sc))
+            cur = ncur
+        out = [jax.tree.map(_np_unsplit, R[q],
+                            jax.tree.map(np.asarray, V[q]))
+               for q in range(p)]
+        return jax.tree.map(lambda *ws: np.stack(ws, axis=0), *out)
+
+
+def _np_set_seg(acc, s: int, value):
+    acc = np.asarray(acc).copy()
+    acc[s] = value
+    return acc
+
+
+# ---------------------------------------------------------------------------
+# Host-side plan verification (dry-run / benchmark drift checks)
+# ---------------------------------------------------------------------------
+
+
+def _witness_payload(name: str, p: int, n0: int, seed: int):
+    rng = np.random.default_rng(seed)
+    if name == "affine":
+        return (rng.standard_normal((p, n0)),
+                rng.standard_normal((p, n0)))
+    if name == "matmul":
+        return rng.standard_normal((p, 4, 4)) * 0.5
+    if name in ("add", "xor"):
+        return rng.integers(0, 1 << 30, size=(p, n0)).astype(np.int64)
+    return rng.standard_normal((p, n0))
+
+
+def _host_reference(kind: str, x, op, ident_fn, p: int):
+    V = [jax.tree.map(lambda a: np.asarray(a)[q], x) for q in range(p)]
+    out = []
+    if kind == "exclusive":
+        acc = ident_fn(V[0])
+        for q in range(p):
+            out.append(acc)
+            acc = op(acc, V[q])
+    elif kind == "inclusive":
+        acc = ident_fn(V[0])
+        for q in range(p):
+            acc = op(acc, V[q])
+            out.append(acc)
+    else:  # allreduce
+        acc = ident_fn(V[0])
+        for q in range(p):
+            acc = op(acc, V[q])
+        out = [acc] * p
+    return jax.tree.map(lambda *ws: np.stack(ws, axis=0), *out)
+
+
+def verify_plan(plan, *, rank_elems: int = 2, seed: int = 0) -> dict:
+    """Execute ``plan``'s schedule(s) in the numpy simulator against a
+    sequential host reference; returns measured-vs-predicted stats.
+
+    Multi-axis plans are verified per sub-plan.  Used by the dry-run
+    (every cell's resolved scan plans) and the benchmark ``--check``
+    smoke modes so plan/measurement drift fails fast, without devices.
+    """
+    if plan.sub_plans:
+        subs = [verify_plan(s, rank_elems=rank_elems, seed=seed)
+                for s in plan.sub_plans]
+        return {"algorithm": plan.algorithm, "p": plan.p,
+                "segments": plan.segments,
+                "ok": all(s["ok"] for s in subs), "sub": subs}
+    m = monoid_lib.get(plan.spec.monoid)
+    op = monoid_lib.NUMPY_OPS.get(m.name, m.op)
+    ident_fn = monoid_lib.NUMPY_IDENTITY.get(
+        m.name, lambda t: jax.tree.map(np.asarray, m.identity_like(t)))
+    S = max(1, plan.segments)
+    n0 = S * rank_elems
+    x = _witness_payload(m.name, plan.p, n0, seed)
+    sched = plan.schedule()
+    with collect_stats() as st:
+        got = SimulatorExecutor().execute(sched, x, m)
+    want = _host_reference(plan.spec.kind, x, op, ident_fn, plan.p)
+    close = all(
+        np.allclose(g, w, rtol=1e-10, atol=1e-12)
+        for g, w in zip(jax.tree.leaves(got), jax.tree.leaves(want)))
+    # byte accounting: the witness is built with S | element count, so
+    # the plan's per-round law (one m/S-byte segment per seg round,
+    # full m per shift/exchange round) must match measurement exactly
+    per_rank = jax.tree.map(lambda a: np.asarray(a)[0], x)
+    leaves = [np.asarray(t) for t in jax.tree.leaves(per_rank)]
+    div = S if any(s2.kind == "seg_shift" for s2 in sched.steps) else 1
+    bytes_expected = plan.rounds * sum(
+        -(-t.size // div) * t.dtype.itemsize for t in leaves)
+    res = {
+        "algorithm": plan.algorithm, "p": plan.p,
+        "segments": plan.segments,
+        "rounds_predicted": plan.rounds, "rounds_measured": st.rounds,
+        "ops_predicted": plan.op_applications,
+        "ops_measured": st.op_applications,
+        "allgathers_predicted": plan.allgathers,
+        "allgathers_measured": st.allgathers,
+        "bytes_expected": bytes_expected,
+        "bytes_measured": sum(st.bytes_per_round),
+        "correct": bool(close),
+    }
+    res["ok"] = bool(
+        close
+        and st.rounds == plan.rounds
+        and st.op_applications == plan.op_applications
+        and st.allgathers == plan.allgathers
+        and sum(st.bytes_per_round) == bytes_expected)
+    return res

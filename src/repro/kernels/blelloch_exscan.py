@@ -39,6 +39,62 @@ def _exscan_kernel(x_ref, o_ref, carry_ref):
     carry_ref[...] = carry + incl[-1:, :]
 
 
+def _combine_kernel(op, a_ref, b_ref, o_ref):
+    """One grid step of the block combine: o = a ⊕ b on a VMEM tile."""
+    o_ref[...] = op(a_ref[...], b_ref[...])
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("op", "block_rows", "interpret"))
+def block_combine(a: jax.Array, b: jax.Array, op, *,
+                  block_rows: int = 256,
+                  interpret: bool = False) -> jax.Array:
+    """Elementwise ⊕ of two same-shape arrays, tiled through VMEM.
+
+    This is the on-chip lowering of a schedule-IR ``RoundStep`` combine
+    (``core.schedule.PallasExecutor``): each communication round's
+    recv ⊕ W runs as a Pallas grid over lane-padded row blocks — the
+    same sequential-grid pattern as the exscan kernel above, but with a
+    caller-supplied elementwise monoid op (``Monoid.leaf_op``) instead
+    of cumsum.
+
+    Args:
+      a, b: same shape/dtype; ``a`` is the low-rank-side operand.
+      op: elementwise jnp function applied to whole VMEM tiles.
+    """
+    assert a.shape == b.shape and a.dtype == b.dtype, (a, b)
+    shape = a.shape
+    n = a.size
+    lane = 128
+    flat_a = a.reshape(-1)
+    flat_b = b.reshape(-1)
+    pad = (-n) % lane
+    if pad:
+        flat_a = jnp.pad(flat_a, (0, pad))
+        flat_b = jnp.pad(flat_b, (0, pad))
+    wa = flat_a.reshape(-1, lane)
+    wb = flat_b.reshape(-1, lane)
+    rows = wa.shape[0]
+    br = min(block_rows, rows)
+    rpad = (-rows) % br
+    if rpad:
+        wa = jnp.pad(wa, ((0, rpad), (0, 0)))
+        wb = jnp.pad(wb, ((0, rpad), (0, 0)))
+    grid = (wa.shape[0] // br,)
+    out = pl.pallas_call(
+        functools.partial(_combine_kernel, op),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((br, lane), lambda i: (i, 0)),
+            pl.BlockSpec((br, lane), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((br, lane), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(wa.shape, a.dtype),
+        interpret=interpret,
+    )(wa, wb)
+    return out.reshape(-1)[:n].reshape(shape)
+
+
 @functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
 def blelloch_exscan(
     x: jax.Array, *, block_rows: int = 256, interpret: bool = False

@@ -31,6 +31,7 @@ import jax  # noqa: E402
 
 from repro import configs  # noqa: E402
 from repro.core import scan_api  # noqa: E402
+from repro.core import schedule as schedule_lib  # noqa: E402
 from repro.core.scan_api import ScanSpec  # noqa: E402
 from repro.launch import mesh as mesh_lib  # noqa: E402
 from repro.launch import roofline as rl  # noqa: E402
@@ -44,6 +45,39 @@ def _cost_analysis(compiled) -> dict:
     if isinstance(cost, (list, tuple)):
         cost = cost[0] if cost else {}
     return cost
+
+
+def _verify_scan_plans(cfg, mesh) -> list:
+    """Resolve the cell's scan spec per mesh axis and execute each
+    plan's schedule IR in the numpy simulator executor against the host
+    reference (no devices), so plan/measurement drift fails the cell
+    before the compile does.
+
+    Covers the payload regimes and monoid families the cell's call
+    sites re-target the spec to: the MoE-dispatch-sized small "add"
+    payload (doubling schedules), a 1 MiB context-carry-sized one
+    (segmented ring on bandwidth-bound axes) under both "add" and the
+    non-commutative "affine" carry monoid, and the non-segmentable
+    "matmul" path.
+    """
+    checks = []
+    small = 4 * max(cfg.n_experts, 16)  # int32 expert counts
+    cases = (("add", small), ("add", 1 << 20), ("affine", 1 << 20),
+             ("matmul", small))
+    with scan_api.use_cost_model(mesh_lib.axis_cost_model):
+        for axis in mesh.axis_names:
+            for mono, nbytes in cases:
+                pl = scan_api.plan(
+                    cfg.scan_spec.over(axis, monoid=mono),
+                    p=mesh.shape[axis], nbytes=nbytes)
+                res = schedule_lib.verify_plan(pl)
+                checks.append({"axis": axis, "monoid": mono,
+                               "nbytes": nbytes, **res})
+                if not res["ok"]:
+                    raise RuntimeError(
+                        f"scan plan/schedule drift on axis {axis!r} "
+                        f"({mono}): {res}")
+    return checks
 
 
 def _probe(cfg, shape, mesh, repeats: int):
@@ -101,6 +135,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
 
     mesh = make_production_mesh(multi_pod=multi_pod)
     n_dev = mesh.devices.size
+    cell["scan_plan_checks"] = _verify_scan_plans(cfg, mesh)
     t0 = time.time()
     # "auto" scan specs price each mesh axis by its interconnect tier
     # (DCI for "pod" on the multi-pod mesh) while this cell traces
@@ -166,6 +201,10 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
     if verbose:
         print(f"[OK] {arch} x {shape_name} @ {cell['mesh']} "
               f"(lower {t_lower:.0f}s, compile {t_compile:.0f}s)")
+        plans = {(c["axis"], c["monoid"], c["nbytes"]):
+                 f"{c['algorithm']}/S{c['segments']}"
+                 for c in cell["scan_plan_checks"]}
+        print(f"  scan plans verified (simulator): {plans}")
         print(f"  memory_analysis: {cell['memory_analysis']}")
         print(f"  cost: {roof.flops:.3e} FLOP/dev, "
               f"{roof.bytes_hbm:.3e} B/dev, "
