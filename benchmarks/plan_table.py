@@ -11,18 +11,38 @@ measurement drift is visible in the table and fails the build in
 ``--check`` mode (CI smoke).  This is the paper's "regimes" story made
 executable: 123-doubling owns the small-m rows, the pipelined
 segmented ring takes over as m grows.
+
+Three further sections cover the composition/fusion refactor:
+
+  * ``plan2d/…`` — composed multi-axis plans (ONE axis-annotated
+    schedule), simulator-verified like the single-axis rows;
+  * ``fused/…`` — k concurrent small scans fused vs serial: the
+    ``rounds_fused`` column shows the single-scan round count the
+    packed payload rides (not k×), ``rounds_serial`` what k separate
+    scans would pay, and ``--check`` executes the fused schedule;
+  * ``--verbose`` prints :func:`scan_api.plan_cache_info` — the table
+    itself exercises the plan cache heavily.
 """
 
 from __future__ import annotations
 
 import argparse
 
+from repro.core import scan_api
 from repro.core import schedule as schedule_lib
-from repro.core.scan_api import ScanSpec, plan
+from repro.core.scan_api import ScanSpec, plan, plan_fused
 from repro.launch.mesh import DCI_COST, ICI_COST
 
 PS = (8, 36, 256, 512)
 MS = (8, 1024, 65_536, 1_048_576, 16_777_216)  # payload bytes
+
+# composed multi-axis cells: (major, minor) rank grids
+PS_2D = ((2, 8), (2, 36), (4, 64))
+MS_2D = (8, 65_536)
+
+# fused cells: k concurrent same-axis scans of m bytes each
+FUSED_K = 4
+MS_FUSED = (8, 1024, 1_048_576)
 
 TIERS = (("ici", ICI_COST), ("dci", DCI_COST))
 
@@ -48,6 +68,54 @@ def run(csv_rows: list, check: bool = False):
                                  "us_abg_model"))
                 if not res["ok"]:
                     drift.append((key, res))
+    # composed multi-axis plans: one schedule, drift-checked like the
+    # single-axis rows (kind "exclusive" and the fused "scan_total")
+    spec2 = spec.over(("pod", "data"))
+    for tier, cm in TIERS:
+        for p1, p2 in PS_2D:
+            for m in MS_2D:
+                for kind in ("exclusive", "scan_total"):
+                    pl = plan(spec2.over(spec2.axis_name, kind=kind),
+                              p=(p1, p2), nbytes=m, cost_model=cm)
+                    res = schedule_lib.verify_plan(pl)
+                    key = f"plan2d/{tier}/{kind}/p{p1}x{p2}/m{m}"
+                    csv_rows.append((key + "/algorithm", pl.algorithm,
+                                     "composite"))
+                    csv_rows.append((key + "/rounds", pl.rounds,
+                                     "rounds"))
+                    csv_rows.append((key + "/rounds_measured",
+                                     res["rounds_measured"],
+                                     "simulator_executor"))
+                    if not res["ok"]:
+                        drift.append((key, res))
+    # fused vs serial: k concurrent small scans ride ONE schedule's
+    # rounds when the α saving beats the packed payload's β cost
+    for tier, cm in TIERS:
+        for p in PS:
+            for m in MS_FUSED:
+                fp = plan_fused([spec] * FUSED_K, p, [m] * FUSED_K,
+                                cost_model=cm)
+                single = plan(spec, p=p, nbytes=m * FUSED_K,
+                              cost_model=cm)
+                key = f"fused/{tier}/p{p}/m{m}/k{FUSED_K}"
+                csv_rows.append((key + "/fused", int(fp.fused),
+                                 "fuse_decision"))
+                csv_rows.append((key + "/rounds_fused", fp.rounds,
+                                 "rounds_chosen"))
+                csv_rows.append((key + "/rounds_serial",
+                                 sum(pl.rounds for pl in fp.plans),
+                                 "k_separate_scans"))
+                csv_rows.append((key + "/round_counts",
+                                 f"{fp.rounds}=={single.rounds}"
+                                 if fp.fused else "serial",
+                                 "fused_equals_single_scan"))
+                if fp.fused and fp.rounds != single.rounds:
+                    drift.append((key, {"fused_rounds": fp.rounds,
+                                        "single_rounds": single.rounds}))
+                if check:
+                    res = fp.verify()
+                    if not res["ok"]:
+                        drift.append((key, res))
     if check and drift:
         raise SystemExit(
             f"plan/measurement drift in {len(drift)} cells: {drift}")
@@ -59,6 +127,12 @@ if __name__ == "__main__":
     ap.add_argument("--check", action="store_true",
                     help="fail if any plan disagrees with the "
                          "simulator-executed schedule (CI smoke)")
+    ap.add_argument("--verbose", action="store_true",
+                    help="also print plan-cache hit/miss counters")
     args = ap.parse_args()
     for r in run([], check=args.check):
         print(",".join(str(x) for x in r))
+    if args.verbose:
+        info = scan_api.plan_cache_info()
+        print(f"plan_cache,hits={info['hits']},misses={info['misses']},"
+              f"size={info['size']}")

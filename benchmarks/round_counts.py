@@ -2,7 +2,9 @@
 exclusive-scan algorithms (exact, from the message-schedule oracle),
 plus the pipelined segmented ring's p−2+S rounds measured by executing
 its schedule IR in the numpy simulator executor against the plan's
-prediction (``--check`` turns any drift into a build failure)."""
+prediction, plus the fused-scan round law — k concurrent small scans
+packed into one payload ride the SINGLE-scan round count, not k× —
+(``--check`` turns any drift into a build failure)."""
 
 from __future__ import annotations
 
@@ -10,11 +12,13 @@ import argparse
 
 from repro.core import oracle
 from repro.core import schedule as schedule_lib
-from repro.core.scan_api import ScanSpec, plan
+from repro.core.scan_api import ScanSpec, plan, plan_fused
 
 PS = (4, 8, 16, 32, 36, 64, 128, 256, 512, 1024)
 RING_PS = (4, 8, 16, 36, 64)  # simulator-executed, keep p moderate
 RING_SS = (1, 4, 16)
+FUSED_PS = (8, 36, 64, 256)  # fused k-scan round-law rows
+FUSED_K = 4
 
 
 def run(csv_rows: list, check: bool = False):
@@ -34,6 +38,25 @@ def run(csv_rows: list, check: bool = False):
             csv_rows.append((key, pl.rounds, "rounds_predicted"))
             csv_rows.append((key + "_measured", res["rounds_measured"],
                              "simulator_executor"))
+            if not res["ok"]:
+                drift.append((key, res))
+    # fused round law: k small concurrent exscans fused into one packed
+    # payload must cost the single-scan round count (not k×) — the
+    # tentpole's α amortization, asserted against the simulator
+    spec = ScanSpec(kind="exclusive", monoid="add", algorithm="auto")
+    for p in FUSED_PS:
+        single = plan(spec, p=p, nbytes=8 * FUSED_K)
+        fp = plan_fused([spec] * FUSED_K, p, [8] * FUSED_K)
+        key = f"rounds/fused_k{FUSED_K}/p{p}"
+        csv_rows.append((key, fp.rounds, "rounds_fused"))
+        csv_rows.append((key + "_single", single.rounds,
+                         "rounds_single_scan"))
+        if not fp.fused or fp.rounds != single.rounds:
+            drift.append((key, {"fused": fp.fused,
+                                "rounds": fp.rounds,
+                                "single": single.rounds}))
+        elif check:
+            res = fp.verify()
             if not res["ok"]:
                 drift.append((key, res))
     if check and drift:

@@ -82,6 +82,36 @@ register_algorithm("hillis_steele",
 register_algorithm("butterfly",
                    kind="allreduce")(schedule_lib.build_butterfly)
 
+# "scan_total": exclusive scan + allreduce of the same payload fused
+# into ONE schedule (outputs (prefix, total)).  Every exclusive
+# algorithm registers a with_total variant under its own name, so
+# pinned specs keep comparing like for like; "fused_doubling" is the
+# round-optimal fused butterfly (both results in ⌈log₂p⌉ rounds at
+# power-of-two p) that "auto" picks in the small-m regime.
+
+
+def _total_variant(base_build):
+    def build(p, segments=None):
+        sched = (base_build(p, segments) if segments is not None
+                 else base_build(p))
+        return schedule_lib.with_total(sched)
+
+    return build
+
+
+register_algorithm("123", kind="scan_total")(
+    _total_variant(schedule_lib.build_123))
+register_algorithm("1doubling", kind="scan_total")(
+    _total_variant(schedule_lib.build_1doubling))
+register_algorithm("two_op", kind="scan_total")(
+    _total_variant(schedule_lib.build_two_op))
+register_algorithm("native", kind="scan_total")(
+    _total_variant(schedule_lib.build_native))
+register_algorithm("ring", kind="scan_total", segmentable=True)(
+    _total_variant(schedule_lib.build_ring))
+register_algorithm("fused_doubling",
+                   kind="scan_total")(schedule_lib.build_scan_total)
+
 
 # ---------------------------------------------------------------------------
 # Legacy string API — deprecated wrappers over scan_api (kept for

@@ -31,11 +31,28 @@ numpy-simulator or Pallas executor.
 ``algorithm="auto"`` minimizes the α·rounds + β·bytes + γ·ops model of
 :class:`CostModel` (per-axis interconnect tiers via ``launch.mesh
 .axis_cost_model``; see DESIGN.md §7 for the model table).  Plans are
-cached by (axis sizes, kind, monoid, payload signature, cost model).
+cached by (axis sizes, kind, monoid, payload signature, cost model);
+:func:`plan_cache_info` reports hits/misses/size.
+
 Multi-axis scans (e.g. ``("pod", "data")``) are rewritten by the
-planner into sub-plans: exscan over the minor axis, allreduce of the
+planner into sub-plans — exscan over the minor axis, allreduce of the
 minor-axis total, exscan of the totals over the major axes, plus one
-combining ⊕ (DESIGN.md §5).
+combining ⊕ (DESIGN.md §5) — and since the composition refactor the
+rewrite is *inlined into one axis-annotated schedule*
+(``schedule_lib.compose``): ``plan.schedule()``/``execute()``/
+``lower()`` work for multi-axis plans exactly like single-axis ones,
+with ``sub_plans`` kept as inspectable provenance.
+
+Two fused entry points amortize rounds across concurrent collectives
+in the paper's latency-dominated small-m regime:
+
+  * :func:`fused_scan` — k independent same-axis/same-kind scans pack
+    into one flattened payload (``schedule_lib.fuse``) and ride a
+    single schedule's q rounds, when the cost model says the α saving
+    beats the β cost of the packed payload (:func:`plan_fused`).
+  * :func:`scan_with_total` — an exclusive scan and an allreduce of
+    the same payload fused into one "scan_total" schedule (for
+    power-of-two p: both in the allreduce's ⌈log₂p⌉ rounds).
 """
 
 from __future__ import annotations
@@ -164,7 +181,7 @@ def _build_cached(algo: ScanAlgorithm, p: int, segments: int):
 
 _REGISTRY: dict[tuple[str, str], ScanAlgorithm] = {}
 
-KINDS = ("exclusive", "inclusive", "allreduce")
+KINDS = ("exclusive", "inclusive", "allreduce", "scan_total")
 
 
 def register_algorithm(name: str, *, kind: str,
@@ -229,7 +246,9 @@ class ScanSpec:
     """Declarative description of a scan collective.
 
     Attributes:
-      kind: "exclusive" | "inclusive" | "allreduce".
+      kind: "exclusive" | "inclusive" | "allreduce" | "scan_total"
+        (the last fuses an exclusive scan with an allreduce of the
+        same payload and yields ``(prefix, total)``).
       monoid: a :class:`repro.core.monoid.Monoid` or registry name.
       algorithm: a registered algorithm name, or "auto" to let the
         planner pick by cost model.
@@ -290,14 +309,18 @@ class ScanPlan:
     ``bytes_on_wire`` is the total bytes through each device's port for
     the planned payload (for the segmented ring: rounds·ceil(m/S), the
     pipelined serialization).  ``segments`` is the planner-chosen (or
-    spec-pinned) payload segment count S.  Multi-axis scans carry
-    ``sub_plans`` (inner exscan, minor-axis allreduce, outer exscan)
-    and one extra combining ⊕ at the top level.
+    spec-pinned) payload segment count S.  Multi-axis plans report a
+    ``composite(inner+allreduce+outer)`` algorithm label and keep
+    their ``sub_plans`` (inner exscan, minor-axis allreduce, outer
+    exscan) as inspectable provenance — ``schedule()`` inlines them
+    into ONE axis-annotated schedule (``schedule_lib.compose``), plus
+    one combining ⊕.
 
     A plan is executable: ``schedule()`` returns the round-by-round IR
     (no tracing), ``execute(x)`` runs it (default: the SPMD executor,
     inside ``shard_map``), ``lower(executor)`` binds a different
-    backend (numpy simulator, Pallas combine).
+    backend (numpy simulator, Pallas combine) — multi-axis plans
+    included.
     """
 
     spec: ScanSpec
@@ -314,11 +337,24 @@ class ScanPlan:
     sub_plans: tuple = ()
 
     def schedule(self) -> "schedule_lib.Schedule":
-        """The executable round-by-round IR of this plan (cached)."""
+        """The executable round-by-round IR of this plan (cached).
+
+        Multi-axis plans compose their sub-plans' schedules into one
+        axis-annotated schedule (DESIGN §5 inlined by
+        ``schedule_lib.compose``)."""
         if self.sub_plans:
-            raise ValueError(
-                "multi-axis plans have no single schedule; inspect "
-                "plan.sub_plans[i].schedule()")
+            axes = self.spec.axes
+            outer = self.sub_plans[-1]
+            outer_axis = None if outer.sub_plans else outer.spec.axes[-1]
+            if self.spec.kind == "scan_total":
+                inner, outer = self.sub_plans
+                return schedule_lib.compose_total(
+                    inner.schedule(), outer.schedule(),
+                    minor_axis=axes[-1], outer_axis=outer_axis)
+            inner, reduce_, outer = self.sub_plans
+            return schedule_lib.compose(
+                inner.schedule(), reduce_.schedule(), outer.schedule(),
+                minor_axis=axes[-1], outer_axis=outer_axis)
         return get_algorithm(self.spec.kind, self.algorithm).schedule(
             self.p, self.segments)
 
@@ -428,26 +464,36 @@ def _plan_cached(spec: ScanSpec, ps: tuple, nbytes: int, cm) -> ScanPlan:
         return _plan_single(spec, ps[0], nbytes, cm)
     # Multi-axis rewrite (DESIGN.md §5): exscan within the minor axis,
     # allreduce of the minor-axis total, exscan of totals over the
-    # major axes, then one ⊕ combining outer and inner.
-    if spec.kind != "exclusive":
+    # major axes, then one ⊕ combining outer and inner.  The top-level
+    # algorithm is the honest composite label, never the inner's name;
+    # schedule() inlines the sub-plans into one composed schedule.
+    if spec.kind not in ("exclusive", "scan_total"):
         raise ValueError(
-            f"multi-axis scan only supports kind='exclusive', "
-            f"got {spec.kind!r}")
+            f"multi-axis scan only supports kind 'exclusive' or "
+            f"'scan_total', got {spec.kind!r}")
     _, op_cost = _monoid_name_and_cost(spec.monoid)
     axes = spec.axes
     inner = _plan_cached(
         spec.over(axes[-1]), (ps[-1],), nbytes, cm)
-    reduce_ = _plan_cached(
-        spec.over(axes[-1], kind="allreduce", algorithm="auto"),
-        (ps[-1],), nbytes, cm)
     outer = _plan_cached(
         spec.over(axes[:-1] if len(axes) > 2 else axes[0]),
         ps[:-1], nbytes, cm)
-    subs = (inner, reduce_, outer)
+    if spec.kind == "scan_total":
+        # the inner scan_total's total IS the minor-axis allreduce:
+        # no separate reduce stage (schedule_lib.compose_total)
+        subs = (inner, outer)
+        label = f"composite({inner.algorithm}+{outer.algorithm})"
+    else:
+        reduce_ = _plan_cached(
+            spec.over(axes[-1], kind="allreduce", algorithm="auto"),
+            (ps[-1],), nbytes, cm)
+        subs = (inner, reduce_, outer)
+        label = (f"composite({inner.algorithm}+{reduce_.algorithm}"
+                 f"+{outer.algorithm})")
     cm_top = _resolve_cm(cm, axes[-1])  # final ⊕ is local compute
     return ScanPlan(
         spec=spec, p=int(np.prod(ps)),
-        algorithm=inner.algorithm, payload_bytes=nbytes,
+        algorithm=label, payload_bytes=nbytes,
         rounds=sum(s.rounds for s in subs),
         op_applications=sum(s.op_applications for s in subs) + 1,
         allgathers=sum(s.allgathers for s in subs),
@@ -491,6 +537,16 @@ def plan_cache_clear():
     _plan_cached.cache_clear()
 
 
+def plan_cache_info() -> dict:
+    """Plan-cache observability: hits/misses/size of the memoized
+    ``plan()`` resolution (printed by ``benchmarks/plan_table.py
+    --verbose``).  Repeated ``plan()`` calls with the same (spec, axis
+    sizes, payload bytes, cost model) signature are cache hits."""
+    info = _plan_cached.cache_info()
+    return {"hits": info.hits, "misses": info.misses,
+            "size": info.currsize, "maxsize": info.maxsize}
+
+
 # ---------------------------------------------------------------------------
 # scan(): execute a spec inside shard_map
 # ---------------------------------------------------------------------------
@@ -504,19 +560,10 @@ def _tree_nbytes(tree) -> int:
 
 
 def _run_plan(pl: ScanPlan, x, m: monoid_lib.Monoid, executor=None):
-    if pl.sub_plans:
-        if executor is not None:
-            raise ValueError(
-                "multi-axis plans execute with the default SPMD "
-                "executor only; run sub_plans individually to use a "
-                "different executor")
-        inner_pl, reduce_pl, outer_pl = pl.sub_plans
-        inner = _run_plan(inner_pl, x, m)
-        total = _run_plan(reduce_pl, x, m)
-        outer = _run_plan(outer_pl, total, m)
-        combined = m.op(outer, inner)
-        schedule_lib._record_op()
-        return combined
+    # Multi-axis plans need no special-casing: schedule() composes the
+    # sub-plans into one axis-annotated schedule that every executor
+    # runs (the composed steps carry their own axis names, so the
+    # default executor axis only matters for single-axis plans).
     if executor is None:
         executor = schedule_lib.SPMDExecutor(pl.spec.axes[-1])
     return executor.execute(pl.schedule(), x, m)
@@ -531,9 +578,10 @@ def scan(x, spec: ScanSpec, *, cost_model=None, executor=None):
     ``algorithm="auto"`` specs therefore adapt per call site to the
     actual message size (including the ring's segment count S).
 
-    ``executor`` overrides the backend for single-axis specs (e.g.
+    ``executor`` overrides the backend (e.g.
     :class:`~repro.core.schedule.PallasExecutor` to run each round's ⊕
-    through the on-chip block-combine kernel).
+    through the on-chip block-combine kernel) — multi-axis specs
+    included, since they compose into one axis-annotated schedule.
     """
     _ensure_registered()
     from jax import lax
@@ -546,6 +594,214 @@ def scan(x, spec: ScanSpec, *, cost_model=None, executor=None):
     pl = plan(spec, ps if len(ps) > 1 else ps[0],
               nbytes=_tree_nbytes(x), cost_model=cost_model)
     return _run_plan(pl, x, m, executor)
+
+
+def scan_with_total(x, spec: ScanSpec, *, cost_model=None,
+                    executor=None):
+    """Fused exclusive scan + allreduce of the same payload: returns
+    ``(prefix, total)`` from ONE "scan_total" schedule instead of two
+    back-to-back collectives.
+
+    For power-of-two p the fused (prefix, total) butterfly computes
+    both in the allreduce's ⌈log₂p⌉ rounds; otherwise the exscan's
+    last rank completes the total with one local ⊕ and broadcasts it.
+    Pinned exclusive algorithm names carry over (every exclusive
+    algorithm registers a ``with_total`` scan_total variant), so
+    benchmark pins keep comparing like for like.  Multi-axis specs
+    compose: the inner scan_total's total IS the minor-axis allreduce
+    the DESIGN §5 rewrite needs, so the fused form shares those rounds
+    instead of re-running them.
+    """
+    if spec.kind not in ("exclusive", "scan_total"):
+        raise ValueError(
+            f"scan_with_total fuses exclusive scans, got kind="
+            f"{spec.kind!r}")
+    _ensure_registered()
+    algo = spec.algorithm
+    if algo != "auto":
+        # pins must stay like for like: an unknown name raises (with
+        # the scan_total registry) rather than silently running "auto"
+        get_algorithm("scan_total", algo)
+    return scan(x, spec.over(spec.axis_name, kind="scan_total",
+                             algorithm=algo),
+                cost_model=cost_model, executor=executor)
+
+
+# ---------------------------------------------------------------------------
+# Fusing k concurrent small scans into shared rounds
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class FusedPlan:
+    """The planner's fuse-or-not decision for k concurrent scans.
+
+    ``plans`` are the k serial plans (one per payload), ``packed`` the
+    single-plan candidate priced at the packed payload size, ``fused``
+    whether packing won: the α saving of riding one schedule's rounds
+    must beat the β cost of the packed payload under the ambient cost
+    model.  ``rounds``/``cost`` reflect the chosen execution.
+    """
+
+    plans: tuple[ScanPlan, ...]
+    packed: ScanPlan
+    fused: bool
+
+    @property
+    def rounds(self) -> int:
+        return self.packed.rounds if self.fused else \
+            sum(pl.rounds for pl in self.plans)
+
+    @property
+    def cost(self) -> float:
+        return self.packed.cost if self.fused else \
+            sum(pl.cost for pl in self.plans)
+
+    def describe(self) -> str:
+        serial = sum(pl.rounds for pl in self.plans)
+        head = (f"fused_scan k={len(self.plans)} p={self.packed.p} "
+                f"[{'fused' if self.fused else 'serial'}] "
+                f"rounds={self.rounds} (serial={serial}) "
+                f"cost={self.cost * 1e6:.2f}us")
+        return head
+
+    def schedule(self, layout) -> "schedule_lib.Schedule":
+        """The fused schedule carrying ``layout`` (raises when the
+        decision was serial)."""
+        if not self.fused:
+            raise ValueError("plan decided against fusing; execute "
+                             "the serial plans instead")
+        return schedule_lib.fuse([self.packed.schedule()], layout)
+
+    def execute(self, xs, *, executor=None):
+        """Run the k scans on payloads ``xs`` (same order as the
+        plans), fused or serial per the decision.  Returns the list of
+        k results."""
+        m = monoid_lib.get(self.plans[0].spec.monoid)
+        if not self.fused:
+            return [_run_plan(pl, x, m, executor)
+                    for pl, x in zip(self.plans, xs)]
+        lead = 1 if isinstance(executor,
+                               schedule_lib.SimulatorExecutor) else 0
+        layout = schedule_lib.make_layout(xs, lead=lead)
+        if executor is None:
+            executor = schedule_lib.SPMDExecutor(
+                self.packed.spec.axes[-1])
+        return list(executor.execute(self.schedule(layout), xs, m))
+
+    def verify(self, *, rank_elems: int = 3, seed: int = 0) -> dict:
+        """Simulator drift check: the fused execution must reproduce k
+        independent host references while measuring exactly the packed
+        plan's rounds/⊕/all-gathers (single-scan round count, not k×).
+        """
+        import jax
+
+        m = monoid_lib.get(self.plans[0].spec.monoid)
+        op = monoid_lib.NUMPY_OPS.get(m.name, m.op)
+        ident_fn = monoid_lib.NUMPY_IDENTITY.get(
+            m.name,
+            lambda t: jax.tree.map(np.asarray, m.identity_like(t)))
+        p = self.packed.p
+        xs = [schedule_lib._witness_payload(
+            m.name, p, rank_elems + i, seed + i)
+            for i in range(len(self.plans))]
+        with schedule_lib.collect_stats() as st:
+            got = self.execute(xs,
+                               executor=schedule_lib.SimulatorExecutor())
+        ok_vals = True
+        for g, x in zip(got, xs):
+            want = schedule_lib._host_reference(
+                self.plans[0].spec.kind, x, op, ident_fn, p)
+            ok_vals = ok_vals and all(
+                np.allclose(a, b, rtol=1e-10, atol=1e-12)
+                for a, b in zip(jax.tree.leaves(g),
+                                jax.tree.leaves(want)))
+        want_plan = self.packed if self.fused else None
+        res = {
+            "k": len(self.plans), "p": p, "fused": self.fused,
+            "rounds_predicted": self.rounds,
+            "rounds_measured": st.rounds,
+            "correct": bool(ok_vals),
+        }
+        if want_plan is not None:
+            res.update(
+                ops_predicted=want_plan.op_applications,
+                ops_measured=st.op_applications,
+                allgathers_predicted=want_plan.allgathers,
+                allgathers_measured=st.allgathers)
+            res["ok"] = bool(
+                ok_vals
+                and st.rounds == want_plan.rounds
+                and st.op_applications == want_plan.op_applications
+                and st.allgathers == want_plan.allgathers)
+        else:
+            res["ok"] = bool(ok_vals and st.rounds == self.rounds)
+        return res
+
+
+def plan_fused(specs, p, nbytes_list, *, cost_model=None) -> FusedPlan:
+    """Price k concurrent scans fused vs serial (the tentpole's α/β
+    trade-off): the packed candidate pays one schedule's α·q but moves
+    the concatenated payload every round; each serial plan optimizes
+    its own payload.  Fusion requires one (kind, axis, monoid)
+    signature, a single algorithm choice, and a monoid whose ⊕ acts on
+    aligned element positions independently (``Monoid.segmentable`` —
+    packing concatenates flattened leaves)."""
+    specs = list(specs)
+    if not specs:
+        raise ValueError("plan_fused needs at least one spec")
+    s0 = specs[0]
+    mono = monoid_lib.get(s0.monoid)
+    fusable = mono.segmentable
+    for s in specs[1:]:
+        if (s.kind, s.axis_name) != (s0.kind, s0.axis_name):
+            raise ValueError(
+                "fused scans must share kind and axis; got "
+                f"{(s.kind, s.axis_name)} vs {(s0.kind, s0.axis_name)}")
+        if monoid_lib.get(s.monoid).name != mono.name:
+            raise ValueError("fused scans must share one monoid")
+        if s.algorithm != s0.algorithm:
+            fusable = False  # conflicting pins: run serially
+    nbytes_list = [int(nb) for nb in nbytes_list]
+    if len(nbytes_list) != len(specs):
+        raise ValueError("one payload size per spec required")
+    cm = cost_model or current_cost_model()
+    serial = tuple(plan(s, p, nbytes=nb, cost_model=cm)
+                   for s, nb in zip(specs, nbytes_list))
+    packed = plan(s0, p, nbytes=sum(nbytes_list), cost_model=cm)
+    fused = bool(fusable and len(specs) > 1
+                 and packed.cost < sum(pl.cost for pl in serial))
+    return FusedPlan(plans=serial, packed=packed, fused=fused)
+
+
+def fused_scan(pairs, *, cost_model=None, executor=None):
+    """Execute k concurrent scans, fused into shared rounds when the
+    cost model approves: ``fused_scan([(x1, spec1), (x2, spec2), ...])``
+    returns the list of k results.
+
+    Inside ``shard_map``, k small same-axis exscans issued per step
+    (MoE dispatch counts, compression offsets, pipeline offsets) pay
+    k·α·q serially; packed into one flattened payload
+    (:class:`~repro.core.schedule.PayloadLayout`) they ride a single
+    schedule's q rounds.  The decision is :func:`plan_fused`'s — pass
+    ``plan_fused(...)`` the same specs/sizes to inspect it first.
+    """
+    pairs = list(pairs)
+    if not pairs:
+        return []
+    xs = [x for x, _ in pairs]
+    specs = [s for _, s in pairs]
+    _ensure_registered()
+    from jax import lax
+
+    s0 = specs[0]
+    if s0.axis_name is None:
+        raise ValueError("fused_scan needs spec.axis_name to be set")
+    ps = tuple(lax.axis_size(a) for a in s0.axes)
+    fp = plan_fused(specs, ps if len(ps) > 1 else ps[0],
+                    [_tree_nbytes(x) for x in xs],
+                    cost_model=cost_model)
+    return fp.execute(xs, executor=executor)
 
 
 # ---------------------------------------------------------------------------
@@ -561,3 +817,27 @@ def host_exscan(lengths: np.ndarray) -> np.ndarray:
     if lengths.shape[0] > 1:
         np.cumsum(lengths[:-1], axis=0, out=out[1:])
     return out
+
+
+def host_fused_exscan(arrays) -> list:
+    """Host twin of :func:`fused_scan` for k exclusive sums over the
+    same leading axis: the columns are packed into one buffer and
+    scanned in a single pass (one traversal instead of k), then
+    unpacked — e.g. the data pipeline's document offsets and ordinals.
+    """
+    arrays = [np.asarray(a) for a in arrays]
+    if not arrays:
+        return []
+    n = arrays[0].shape[0]
+    cols = []
+    for a in arrays:
+        if a.shape[0] != n:
+            raise ValueError("fused host exscans must share their "
+                             f"leading axis ({a.shape[0]} != {n})")
+        cols.append(a.reshape(n, -1))
+    packed = host_exscan(np.concatenate(cols, axis=1))
+    outs, off = [], 0
+    for a, c in zip(arrays, cols):
+        outs.append(packed[:, off:off + c.shape[1]].reshape(a.shape))
+        off += c.shape[1]
+    return outs

@@ -21,12 +21,28 @@ Because the planner's counts and the executors consume the *same* IR,
 ``ScanPlan`` predictions equal ``collect_stats()`` measurements by
 construction — the IR is the single source of truth for what runs.
 
-Payload segmentation is a schedule transform: :func:`segment` turns the
-p−1-round neighbour ring into the paper's pipelined fixed-degree
-algorithm — each leaf is flattened and split into S contiguous element
-blocks and the per-segment running prefixes streamed through p−2+S
-neighbour rounds, so each round carries m/S bytes
-(~(1 + (p−2)/S)·m serialized instead of (p−1)·m).
+Three schedule *transforms* extend single algorithms into programs:
+
+  * :func:`segment` — the paper's large-m pipelining: the p−1-round
+    neighbour ring becomes p−2+S rounds of one m/S-byte segment each.
+  * :func:`compose` — the DESIGN §5 multi-axis rewrite inlined into
+    ONE schedule: inner exscan + minor-axis allreduce + outer exscan
+    + one combining ⊕, each :class:`RoundStep` tagged with the mesh
+    axis it runs over and stitched together by register control steps
+    (``stage`` saves/rebinds the accumulator between phases, ``merge``
+    applies the final ⊕).  Multi-axis plans therefore lower, simulate
+    and Pallas-execute exactly like single-axis ones.
+  * :func:`fuse` — k same-axis/same-kind scan payloads packed into one
+    flattened buffer described by a :class:`PayloadLayout`, so all k
+    scans ride the SAME q rounds (α·q once instead of k·α·q) and are
+    unpacked afterwards.
+
+``with_total``/``build_scan_total`` additionally fuse an exclusive
+scan with an allreduce of the same payload ("scan_total" kind): for
+power-of-two p a single (prefix, total) butterfly computes both in
+⌈log₂p⌉ rounds; otherwise the exscan's last rank completes the total
+locally and broadcasts it — either way one schedule, one payload
+stream, instead of two back-to-back collectives.
 
 Byte prediction note: the plan's ``bytes_on_wire`` for a segmented
 schedule is ``rounds · ceil(m/S)``; the traced program zero-pads each
@@ -39,7 +55,9 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
+import itertools
 import threading
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -134,18 +152,33 @@ class RoundStep:
     """One round of a schedule.
 
     kind:
-      "shift"     — ppermute r → r+skip; masked receive; combine.
-      "seg_shift" — pipelined-ring round ``t``: neighbour ppermute of
-                    one payload segment; rank r stores received segment
-                    s = t+1−r (when 0 ≤ s < S) as its result and, if
-                    ``prep``, forwards recv ⊕ V[s] next round (1 ⊕).
-      "exchange"  — butterfly ppermute r ↔ r^skip; two order-preserving
-                    combines selected by the rank's side bit.
-      "allgather" — XLA-native all-gather of the input V.
-      "fold"      — local left-fold of the gathered values below own
-                    rank (``fold_count`` ⊕ executions).
-      "bcast"     — broadcast rank ``root``'s value (via all-gather).
+      "shift"       — ppermute r → r+skip; masked receive; combine.
+      "seg_shift"   — pipelined-ring round ``t``: neighbour ppermute of
+                      one payload segment; rank r stores received
+                      segment s = t+1−r (when 0 ≤ s < S) as its result
+                      and, if ``prep``, forwards recv ⊕ V[s] next
+                      round (1 ⊕).  ``seg`` carries S.
+      "exchange"    — butterfly ppermute r ↔ r^skip; two
+                      order-preserving combines selected by the rank's
+                      side bit.
+      "scan_reduce" — fused exscan+allreduce butterfly round: exchange
+                      the window total T with r^skip while the lower
+                      side also folds the received total into the
+                      exclusive prefix P (3 ⊕ in SPMD lockstep).  After
+                      the run P is saved into register ``reg``.
+      "allgather"   — XLA-native all-gather of the input V.
+      "fold"        — local left-fold of the gathered values below own
+                      rank (``fold_count`` ⊕ executions).
+      "bcast"       — broadcast rank ``root``'s value (via all-gather).
+      "stage"       — control (no round): save W into register ``reg``
+                      (if set), rebind the stage input X ← W when
+                      ``src == "w"``, then reinit W per ``init``
+                      ("identity" | "x" | "w" | a register name).
+      "merge"       — control ⊕: W ← W ⊕ reg (reg "$x": the current
+                      stage input); W covers the lower ranks.
 
+    axis: mesh axis name this step runs over (None: the executor's
+      default axis) — composed multi-axis schedules tag every step.
     send (shift only): "x" the input V, "w" the accumulator,
       "w_op_x" the prepared W ⊕ V (counts one ⊕).
     mask/bound (shift only): receive participation — "ge": r ≥ bound,
@@ -164,11 +197,17 @@ class RoundStep:
     prep: bool = False  # seg_shift: forward-prep ⊕ this round
     fold_count: int = 0  # fold: ⊕ executions
     root: int = 0  # bcast source rank
+    axis: Any = None  # mesh axis this step runs over (None: default)
+    seg: int = 0  # seg_shift: segment count S of this run
+    reg: str = ""  # stage save / merge source / scan_reduce prefix reg
+    src: str = ""  # stage: "w" rebinds X ← W
+    init: str = "identity"  # stage: new W ("identity"|"x"|"w"|register)
 
     @property
     def is_round(self) -> bool:
         """Does this step cost one ppermute communication round?"""
-        return self.kind in ("shift", "seg_shift", "exchange")
+        return self.kind in ("shift", "seg_shift", "exchange",
+                             "scan_reduce")
 
     @property
     def ops(self) -> int:
@@ -181,41 +220,68 @@ class RoundStep:
             n += 1 if self.prep else 0
         elif self.kind == "exchange":
             n += 2
+        elif self.kind == "scan_reduce":
+            n += 3
         elif self.kind == "fold":
             n += self.fold_count
+        elif self.kind == "merge":
+            n += 1
         return n
 
     def describe(self) -> str:
+        at = f"  @{self.axis}" if self.axis is not None else ""
         if self.kind == "shift":
             send = {"x": "V", "w": "W", "w_op_x": "W⊕V"}[self.send]
             cmp_ = {"ge": ">=", "gt": ">"}[self.mask]
             comb = "W←recv" if self.combine == "copy" else "W←recv⊕W"
             return (f"shift +{self.skip:<4d} send={send:<4s} "
-                    f"recv r{cmp_}{self.bound}  {comb}")
+                    f"recv r{cmp_}{self.bound}  {comb}{at}")
         if self.kind == "seg_shift":
             tail = "; send←recv⊕V[s]" if self.prep else "  (drain)"
-            return f"ring  t={self.t:<3d} seg s=t+1−r  W[s]←recv{tail}"
+            return f"ring  t={self.t:<3d} seg s=t+1−r  W[s]←recv{tail}{at}"
         if self.kind == "exchange":
-            return f"xchg  r↔r^{self.skip}  W←ordered(recv,W)"
+            return f"xchg  r↔r^{self.skip}  W←ordered(recv,W){at}"
+        if self.kind == "scan_reduce":
+            return (f"scrd  r↔r^{self.skip}  T←ordered(recv,T); "
+                    f"low: P←recv⊕P{at}")
         if self.kind == "allgather":
-            return "all-gather V"
+            return f"all-gather V{at}"
         if self.kind == "fold":
             return f"local fold of {self.fold_count + 1} gathered values"
         if self.kind == "bcast":
-            return f"broadcast rank {self.root} (all-gather)"
+            return f"broadcast rank {self.root} (all-gather){at}"
+        if self.kind == "stage":
+            save = f" save W→{self.reg!r};" if self.reg else ""
+            src = " X←W;" if self.src == "w" else ""
+            return f"stage{save}{src} W←{self.init}"
+        if self.kind == "merge":
+            other = "X" if self.reg == "$x" else repr(self.reg)
+            return f"merge W←W⊕{other}"
         return self.kind
 
 
 @dataclasses.dataclass(frozen=True)
 class Schedule:
-    """An executable scan program: init state + ordered RoundSteps."""
+    """An executable scan program: init state + ordered RoundSteps.
+
+    ``axes`` names the mesh axes (major→minor, with sizes) of a
+    composed multi-axis schedule; single-axis schedules leave it empty
+    and run over the executor's axis.  ``outputs`` lists what
+    ``execute`` returns — "$w" is the final accumulator, anything else
+    a register name; more than one entry returns a tuple.  ``layout``
+    (set by :func:`fuse`) packs a sequence of payloads into one
+    flattened buffer around the run.
+    """
 
     algorithm: str
-    kind: str  # "exclusive" | "inclusive" | "allreduce"
+    kind: str  # "exclusive" | "inclusive" | "allreduce" | "scan_total"
     p: int
     init: str = "identity"  # initial accumulator W: "identity" | "x"
     segments: tuple[Segment, ...] = (Segment(0, 1),)
     steps: tuple[RoundStep, ...] = ()
+    axes: tuple = ()  # ((axis_name, size), ...) major→minor; composed
+    outputs: tuple = ("$w",)
+    layout: "PayloadLayout | None" = None
 
     @property
     def n_segments(self) -> int:
@@ -240,6 +306,9 @@ class Schedule:
                 f"S={self.n_segments} rounds={self.rounds} "
                 f"⊕={self.op_applications} "
                 f"allgathers={self.allgathers} (W₀={self.init})")
+        if self.axes:
+            head += " axes=" + "x".join(
+                f"{name}:{size}" for name, size in self.axes)
         lines = [head]
         rnd = 0
         for st in self.steps:
@@ -327,7 +396,8 @@ def build_ring(p: int, segments: int = 1) -> Schedule:
     if p <= 1:
         return Schedule("ring", "exclusive", p, segments=_segs(S))
     n = p - 2 + S
-    steps = tuple(RoundStep("seg_shift", skip=1, t=t, prep=(t < n - 1))
+    steps = tuple(RoundStep("seg_shift", skip=1, t=t, prep=(t < n - 1),
+                            seg=S)
                   for t in range(n))
     return Schedule("ring", "exclusive", p, segments=_segs(S),
                     steps=steps)
@@ -362,6 +432,50 @@ def build_butterfly(p: int) -> Schedule:
                     steps=tuple(steps))
 
 
+def with_total(base: Schedule) -> Schedule:
+    """Fuse an allreduce of the input onto an exclusive-scan schedule.
+
+    After the exscan the last rank alone holds the full prefix, so one
+    local ⊕ with its own V completes the total, and one broadcast
+    distributes it — no second collective sweep.  Returns a
+    "scan_total" schedule with ``outputs = (prefix, total)``.
+    """
+    if base.kind != "exclusive":
+        raise ValueError(
+            f"with_total composes over exclusive schedules, "
+            f"not {base.kind!r}")
+    steps = base.steps + (
+        RoundStep("stage", reg="prefix", init="w"),
+        RoundStep("merge", reg="$x"),
+    )
+    if base.p >= 2:
+        steps = steps + (RoundStep("bcast", root=base.p - 1),)
+    return Schedule(f"{base.algorithm}+total", "scan_total", base.p,
+                    init=base.init, segments=base.segments, steps=steps,
+                    outputs=("prefix", "$w"))
+
+
+def build_scan_total(p: int) -> Schedule:
+    """Fused exscan+allreduce ("scan_total"): for power-of-two p a
+    single (prefix, total) butterfly — each round exchanges the window
+    total T with r^2^k while the lower side folds the received total
+    into its exclusive prefix P — computes BOTH in ⌈log₂ p⌉ rounds,
+    the allreduce's round count.  Non-power-of-two p falls back to
+    ``with_total(build_123(p))``: the exscan's rounds plus one local ⊕
+    and a broadcast.  ``outputs = (prefix, total)``."""
+    if p >= 2 and not (p & (p - 1)):
+        steps = []
+        k = 0
+        while (1 << k) < p:
+            steps.append(RoundStep("scan_reduce", skip=1 << k,
+                                   reg="prefix"))
+            k += 1
+        return Schedule("fused_doubling", "scan_total", p, init="x",
+                        steps=tuple(steps), outputs=("prefix", "$w"))
+    sched = with_total(build_123(p))
+    return dataclasses.replace(sched, algorithm="fused_doubling")
+
+
 def segment(schedule: Schedule, S: int) -> Schedule:
     """The segmentation transform: split the payload into S row-blocks
     and stream them through p−2+S neighbour rounds.
@@ -375,6 +489,249 @@ def segment(schedule: Schedule, S: int) -> Schedule:
             f"only neighbour-ring schedules are segmentable, "
             f"not {schedule.algorithm!r}")
     return build_ring(schedule.p, S)
+
+
+# ---------------------------------------------------------------------------
+# Multi-axis composition (DESIGN §5 as a schedule transform)
+# ---------------------------------------------------------------------------
+
+
+_STAGE_INITS = ("identity", "x", "w")
+
+
+def _tag_axis(steps, axis):
+    """Tag untagged steps with ``axis`` (control steps stay axis-free)."""
+    out = []
+    for st in steps:
+        if st.axis is None and st.kind not in ("stage", "merge"):
+            st = dataclasses.replace(st, axis=axis)
+        out.append(st)
+    return tuple(out)
+
+
+def _ns_regs(steps, ns: str):
+    """Namespace every register reference so inlined sub-schedules
+    cannot collide with the composing schedule's own registers."""
+    out = []
+    for st in steps:
+        rep = {}
+        if st.reg and st.reg != "$x":
+            rep["reg"] = ns + st.reg
+        if st.kind == "stage" and st.init not in _STAGE_INITS:
+            rep["init"] = ns + st.init
+        out.append(dataclasses.replace(st, **rep) if rep else st)
+    return tuple(out)
+
+
+def _ns_outputs(outputs, ns: str):
+    return tuple(o if o == "$w" else ns + o for o in outputs)
+
+
+def _outer_parts(outer: Schedule, outer_axis):
+    """Inlineable (steps, axes) of the outer schedule: already-composed
+    outers carry their own axis tags; single-axis ones get tagged."""
+    steps = _ns_regs(outer.steps, "o:")
+    if outer.axes:
+        return steps, outer.axes
+    if outer_axis is None:
+        raise ValueError("outer_axis is required for a single-axis "
+                         "outer schedule")
+    return _tag_axis(steps, outer_axis), ((outer_axis, outer.p),)
+
+
+def compose(inner: Schedule, reduce_: Schedule, outer: Schedule, *,
+            minor_axis, outer_axis=None) -> Schedule:
+    """Inline the DESIGN §5 multi-axis exscan rewrite into ONE schedule.
+
+        exscan(x, (A, B)) = exscan(total_B(x), A) ⊕ exscan(x, B)
+
+    ``inner`` (exclusive) and ``reduce_`` (allreduce) run over the
+    minor axis, ``outer`` (exclusive; possibly itself composed) over
+    the major axes, stitched by register control steps:  the inner
+    prefix is saved, the minor-axis total becomes the outer stage's
+    input, and one final ``merge`` applies the combining ⊕.  Every
+    step is axis-tagged, so the result lowers/simulates/executes like
+    any single-axis schedule.
+    """
+    if inner.kind != "exclusive" or outer.kind != "exclusive":
+        raise ValueError("compose() takes exclusive inner/outer "
+                         f"schedules, got {inner.kind!r}/{outer.kind!r}")
+    if reduce_.kind != "allreduce":
+        raise ValueError(f"compose() needs an allreduce middle "
+                         f"schedule, got {reduce_.kind!r}")
+    if reduce_.p != inner.p:
+        raise ValueError("inner exscan and minor-axis allreduce must "
+                         f"share p ({inner.p} != {reduce_.p})")
+    o_steps, o_axes = _outer_parts(outer, outer_axis)
+    steps = (
+        _tag_axis(inner.steps, minor_axis)
+        + (RoundStep("stage", reg="inner", init=reduce_.init),)
+        + _tag_axis(_ns_regs(reduce_.steps, "r:"), minor_axis)
+        + (RoundStep("stage", src="w", init=outer.init),)
+        + o_steps
+        + (RoundStep("merge", reg="inner"),)
+    )
+    name = (f"composite({inner.algorithm}+{reduce_.algorithm}"
+            f"+{outer.algorithm})")
+    return Schedule(name, "exclusive", inner.p * outer.p,
+                    init=inner.init, steps=steps,
+                    axes=o_axes + ((minor_axis, inner.p),))
+
+
+def compose_total(inner: Schedule, outer: Schedule, *,
+                  minor_axis, outer_axis=None) -> Schedule:
+    """Multi-axis "scan_total": the §5 rewrite where the minor-axis
+    allreduce IS the inner scan_total's total — no separate reduce
+    stage.  Both sub-schedules must be "scan_total" (prefix in
+    register ``prefix``, total in W); the result keeps that contract,
+    so composition nests for any number of axes."""
+    for s, who in ((inner, "inner"), (outer, "outer")):
+        if s.kind != "scan_total":
+            raise ValueError(f"compose_total needs scan_total "
+                             f"sub-schedules; {who} is {s.kind!r}")
+    o_steps, o_axes = _outer_parts(outer, outer_axis)
+    steps = (
+        _tag_axis(_ns_regs(inner.steps, "i:"), minor_axis)
+        # W now holds the minor-axis total: it is the outer stage input
+        + (RoundStep("stage", src="w", init=outer.init),)
+        + o_steps
+        # W = grand total; stash it, combine the two partial prefixes,
+        # then restore the (prefix in reg, total in W) contract
+        + (RoundStep("stage", reg="total", init="o:prefix"),
+           RoundStep("merge", reg="i:prefix"),
+           RoundStep("stage", reg="prefix", init="total"))
+    )
+    name = f"composite({inner.algorithm}+{outer.algorithm})"
+    return Schedule(name, "scan_total", inner.p * outer.p,
+                    init=inner.init, steps=steps,
+                    axes=o_axes + ((minor_axis, inner.p),),
+                    outputs=("prefix", "$w"))
+
+
+# ---------------------------------------------------------------------------
+# Payload fusion: k concurrent same-kind scans packed into one buffer
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class PayloadLayout:
+    """Packing of k pytree payloads into one flat buffer per leaf slot.
+
+    All payloads share ``treedef``; per leaf slot j the packed buffer
+    concatenates every payload's flattened leaf j (``dtypes[j]`` must
+    agree across payloads so ⊕ applies uniformly).  ``offsets[i][j]``/
+    ``shapes[i][j]`` locate payload i's leaf j inside buffer j;
+    ``totals[j]`` is buffer j's element count.  Sound for monoids that
+    combine aligned element positions independently
+    (``Monoid.segmentable``)."""
+
+    treedef: Any
+    dtypes: tuple  # per slot: numpy dtype str, shared by all payloads
+    shapes: tuple  # per payload: per slot leaf shape
+    offsets: tuple  # per payload: per slot element offset
+    totals: tuple  # per slot: total packed elements
+
+    @property
+    def n(self) -> int:
+        """Number of packed payloads."""
+        return len(self.shapes)
+
+
+def make_layout(xs, *, lead: int = 0) -> PayloadLayout:
+    """Build the :class:`PayloadLayout` packing payloads ``xs``
+    (``lead`` leading axes — e.g. the simulator's rank axis — are
+    excluded from the per-payload shapes)."""
+    if not xs:
+        raise ValueError("make_layout needs at least one payload")
+    _, treedef = jax.tree.flatten(xs[0])
+    dtypes = None
+    shapes, offsets = [], []
+    offs = None
+    for x in xs:
+        leaves, td = jax.tree.flatten(x)
+        if td != treedef:
+            raise ValueError(
+                f"fused payloads must share one tree structure "
+                f"({td} != {treedef})")
+        if dtypes is None:
+            dtypes = tuple(np.dtype(lf.dtype).str for lf in leaves)
+            offs = [0] * len(leaves)
+        row_s, row_o = [], []
+        for j, lf in enumerate(leaves):
+            if np.dtype(lf.dtype).str != dtypes[j]:
+                raise ValueError(
+                    f"fused payloads must share leaf dtypes; slot {j} "
+                    f"has {np.dtype(lf.dtype).str} vs {dtypes[j]}")
+            shp = tuple(int(d) for d in lf.shape[lead:])
+            row_s.append(shp)
+            row_o.append(offs[j])
+            offs[j] += int(np.prod(shp, dtype=np.int64))
+        shapes.append(tuple(row_s))
+        offsets.append(tuple(row_o))
+    return PayloadLayout(treedef=treedef, dtypes=dtypes,
+                         shapes=tuple(shapes), offsets=tuple(offsets),
+                         totals=tuple(offs))
+
+
+def pack_payloads(layout: PayloadLayout, xs, *, xp=jnp, lead: int = 0):
+    """Pack payloads into the layout's flat buffers (one pytree with
+    the shared treedef whose leaves are the packed buffers)."""
+    flat = [jax.tree.flatten(x)[0] for x in xs]
+    if len(flat) != layout.n:
+        raise ValueError(f"layout packs {layout.n} payloads, "
+                         f"got {len(flat)}")
+    bufs = []
+    for j in range(len(layout.dtypes)):
+        parts = []
+        for i in range(layout.n):
+            a = xp.asarray(flat[i][j])
+            parts.append(a.reshape(a.shape[:lead] + (-1,)))
+        bufs.append(xp.concatenate(parts, axis=lead) if len(parts) > 1
+                    else parts[0])
+    return jax.tree.unflatten(layout.treedef, bufs)
+
+
+def unpack_payloads(layout: PayloadLayout, packed, *, lead: int = 0):
+    """Slice the packed buffers back into the k original payloads."""
+    bufs = jax.tree.flatten(packed)[0]
+    outs = []
+    for i in range(layout.n):
+        leaves = []
+        for j, buf in enumerate(bufs):
+            off = layout.offsets[i][j]
+            shp = layout.shapes[i][j]
+            size = int(np.prod(shp, dtype=np.int64))
+            sl = buf[..., off:off + size]
+            leaves.append(sl.reshape(buf.shape[:lead] + shp))
+        outs.append(jax.tree.unflatten(layout.treedef, leaves))
+    return outs
+
+
+def fuse(schedules, layout: PayloadLayout) -> Schedule:
+    """Fuse k concurrent same-axis/same-kind scans into one schedule:
+    the packed payload (per ``layout``) rides the rounds of the
+    cheapest compatible schedule, so k scans cost one scan's α·q.
+
+    All schedules must agree on (kind, p, axes) and be single-output;
+    executors pack the payload sequence on entry and unpack the k
+    results on exit."""
+    if not schedules:
+        raise ValueError("fuse() needs at least one schedule")
+    base = min(schedules, key=lambda s: (s.rounds, s.op_applications))
+    for s in schedules:
+        if (s.kind, s.p, s.axes) != (base.kind, base.p, base.axes):
+            raise ValueError(
+                "fused schedules must share kind/p/axes; got "
+                f"{(s.kind, s.p, s.axes)} vs "
+                f"{(base.kind, base.p, base.axes)}")
+        if s.outputs != ("$w",):
+            raise ValueError("only single-output schedules fuse "
+                             f"(got outputs={s.outputs})")
+        if s.layout is not None:
+            raise ValueError("schedule is already fused")
+    return dataclasses.replace(
+        base, layout=layout,
+        algorithm=f"fused[{layout.n}]({base.algorithm})")
 
 
 # ---------------------------------------------------------------------------
@@ -416,6 +773,57 @@ def _np_unsplit(seg, like):
 
 
 # ---------------------------------------------------------------------------
+# Stage-run decomposition shared by the executors: a schedule's steps
+# split into control steps (stage/merge) and maximal runs of compute
+# steps over one axis (seg_shift and scan_reduce runs kept homogeneous,
+# since they carry run-level auxiliary state).
+# ---------------------------------------------------------------------------
+
+
+_STATEFUL = ("seg_shift", "scan_reduce")
+
+
+def _stage_runs(steps):
+    runs: list = []
+    cur: list = []
+
+    def flush():
+        nonlocal cur
+        if cur:
+            runs.append(cur)
+            cur = []
+
+    for st in steps:
+        if st.kind in ("stage", "merge"):
+            flush()
+            runs.append(st)
+            continue
+        if cur and (cur[0].axis != st.axis
+                    or (cur[0].kind in _STATEFUL) !=
+                    (st.kind in _STATEFUL)
+                    or (st.kind in _STATEFUL
+                        and cur[0].kind != st.kind)):
+            flush()
+        cur.append(st)
+    flush()
+    return runs
+
+
+def _axis_size(sched: Schedule, axis_tag) -> int:
+    if axis_tag is None or not sched.axes:
+        return sched.p
+    for name, size in sched.axes:
+        if name == axis_tag:
+            return size
+    raise ValueError(
+        f"step axis {axis_tag!r} not among schedule axes {sched.axes}")
+
+
+def _run_seg_count(run, sched: Schedule) -> int:
+    return run[0].seg or sched.n_segments
+
+
+# ---------------------------------------------------------------------------
 # Executors
 # ---------------------------------------------------------------------------
 
@@ -454,23 +862,65 @@ def _fixup_identity(m: monoid_lib.Monoid, recv, has_src):
 class SPMDExecutor(Executor):
     """Executes a schedule as the SPMD ppermute program of its rounds.
 
-    Must run where ``axis_name`` is bound (inside ``shard_map``).  MPI
-    rank conditionals become the schedule's receive masks: a rank with
-    no source "receives" the monoid identity, making the combine a
-    no-op (DESIGN.md §2)."""
+    Must run where the schedule's axis names are bound (inside
+    ``shard_map``); ``axis_name`` is the default for untagged steps.
+    Composed multi-axis schedules carry per-step axis tags and run as
+    one program.  MPI rank conditionals become the schedule's receive
+    masks: a rank with no source "receives" the monoid identity, making
+    the combine a no-op (DESIGN.md §2)."""
 
-    def __init__(self, axis_name):
+    def __init__(self, axis_name=None):
         self.axis_name = axis_name
 
     def execute(self, sched: Schedule, x, m: monoid_lib.Monoid):
-        axis = self.axis_name
-        p = sched.p
-        r = lax.axis_index(axis)
-        if any(st.kind == "seg_shift" for st in sched.steps):
-            return self._execute_segmented(sched, x, m, axis, p, r)
+        if sched.layout is not None:
+            packed = pack_payloads(sched.layout, list(x), xp=jnp)
+            out = self._execute(sched, packed, m)
+            return unpack_payloads(sched.layout, out)
+        return self._execute(sched, x, m)
+
+    def _execute(self, sched: Schedule, x, m: monoid_lib.Monoid):
+        regs: dict = {}
         w = x if sched.init == "x" else m.identity_like(x)
+        for run in _stage_runs(sched.steps):
+            if isinstance(run, RoundStep):  # control step
+                st = run
+                if st.kind == "stage":
+                    if st.reg:
+                        regs[st.reg] = w
+                    if st.src == "w":
+                        x = w
+                    if st.init == "identity":
+                        w = m.identity_like(x)
+                    elif st.init == "x":
+                        w = x
+                    elif st.init != "w":
+                        w = regs[st.init]
+                else:  # merge
+                    other = x if st.reg == "$x" else regs[st.reg]
+                    w = self.combine(m, w, other)
+                    _record_op()
+                continue
+            axis = run[0].axis if run[0].axis is not None \
+                else self.axis_name
+            p = _axis_size(sched, run[0].axis)
+            if run[0].kind == "seg_shift":
+                w = self._run_segmented(run, x, m, axis, p,
+                                        _run_seg_count(run, sched))
+            elif run[0].kind == "scan_reduce":
+                w, prefix = self._run_scan_reduce(run, x, w, m, axis, p)
+                if run[-1].reg:
+                    regs[run[-1].reg] = prefix
+            else:
+                w = self._run_steps(run, x, w, m, axis, p)
+        outs = tuple(w if o == "$w" else regs[o]
+                     for o in sched.outputs)
+        return outs[0] if len(outs) == 1 else outs
+
+    def _run_steps(self, steps, x, w, m, axis, p):
+        r = lax.axis_index(axis)
         gathered = None
-        for st in sched.steps:
+        for st in steps:
             if st.kind == "shift":
                 if st.send == "x":
                     src = x
@@ -526,15 +976,38 @@ class SPMDExecutor(Executor):
                     w)
         return w
 
-    def _execute_segmented(self, sched, x, m, axis, p, r):
+    def _run_scan_reduce(self, steps, x, w, m, axis, p):
+        """The fused exscan+allreduce butterfly: W carries the window
+        total T (entering as V via init="x"), the auxiliary P the
+        exclusive prefix; each round exchanges T with r^skip and the
+        lower side folds the received total into P as well."""
+        r = lax.axis_index(axis)
+        prefix = m.identity_like(x)
+        for st in steps:
+            perm = [(i, i ^ st.skip) for i in range(p)]
+            _record_round(w)
+            recv = jax.tree.map(
+                lambda t: lax.ppermute(t, axis, perm), w)
+            low_side = (r & st.skip) != 0  # partner covers lower ranks
+            new_p = self.combine(m, recv, prefix)
+            t_lo = self.combine(m, recv, w)
+            t_hi = self.combine(m, w, recv)
+            _record_op(3)
+            prefix = jax.tree.map(
+                lambda a, b: jnp.where(low_side, a, b), new_p, prefix)
+            w = jax.tree.map(
+                lambda a, b: jnp.where(low_side, a, b), t_lo, t_hi)
+        return w, prefix
+
+    def _run_segmented(self, steps, x, m, axis, p, S):
         """The pipelined ring: stream S leaf row-blocks through
         neighbour rounds; per-rank segment indices are dynamic
         (rank r handles segment t+1−r in round t)."""
-        S = sched.n_segments
+        r = lax.axis_index(axis)
         V = jax.tree.map(lambda a: _jnp_split(a, S), x)
         R = m.identity_like(V)
         cur = jax.tree.map(lambda a: a[0], V)  # rank 0 sends V[0] first
-        for st in sched.steps:
+        for st in steps:
             s_recv = st.t + 1 - r
             valid = (r >= 1) & (s_recv >= 0) & (s_recv < S)
             sc = jnp.clip(s_recv, 0, S - 1)
@@ -568,7 +1041,7 @@ class PallasExecutor(SPMDExecutor):
     wrap the call site with ``check_vma=False`` (``check_rep=False`` on
     older jax)."""
 
-    def __init__(self, axis_name, *, interpret: bool | None = None,
+    def __init__(self, axis_name=None, *, interpret: bool | None = None,
                  block_rows: int = 256):
         super().__init__(axis_name)
         self.interpret = interpret
@@ -590,103 +1063,210 @@ class PallasExecutor(SPMDExecutor):
 
 class SimulatorExecutor(Executor):
     """Pure-numpy rank-by-rank execution of a schedule at any p — no
-    devices, no tracing.  Leaves carry a leading rank axis of size p.
+    devices, no tracing.  Leaves carry a leading rank axis of size p
+    (row-major over the schedule's axes for composed multi-axis
+    schedules: each run's rounds act within independent axis groups,
+    exactly like MPI communicator splits).
 
     Records the same aggregate stats as the SPMD executor into the
     ambient :func:`collect_stats` context, so plan-vs-execution drift is
     checkable host-side (dry-run, benchmark ``--check`` modes)."""
 
     def execute(self, sched: Schedule, x, m: monoid_lib.Monoid):
-        p = sched.p
         op = monoid_lib.NUMPY_OPS.get(m.name, m.op)
         ident_fn = monoid_lib.NUMPY_IDENTITY.get(m.name)
         if ident_fn is None:
             def ident_fn(t):
                 return jax.tree.map(np.asarray, m.identity_like(t))
 
-        V = [jax.tree.map(lambda a: np.asarray(a)[q], x)
-             for q in range(p)]
+        if sched.layout is not None:
+            xs = [jax.tree.map(np.asarray, xi) for xi in x]
+            packed = pack_payloads(sched.layout, xs, xp=np, lead=1)
+            out = self._execute(sched, packed, m, op, ident_fn)
+            return unpack_payloads(sched.layout, out, lead=1)
+        return self._execute(sched, x, m, op, ident_fn)
+
+    def _execute(self, sched, x, m, op, ident_fn):
+        p = sched.p
         if p == 0:
             return x
-        if any(st.kind == "seg_shift" for st in sched.steps):
-            return self._execute_segmented(sched, V, op, ident_fn, x)
+        X = [jax.tree.map(lambda a: np.asarray(a)[q], x)
+             for q in range(p)]
         if sched.init == "x":
-            W = [jax.tree.map(np.copy, v) for v in V]
+            W = [jax.tree.map(np.copy, v) for v in X]
         else:
-            W = [ident_fn(v) for v in V]
-        gathered = None
-        for st in sched.steps:
+            W = [ident_fn(v) for v in X]
+        regs: dict = {}
+        for run in _stage_runs(sched.steps):
+            if isinstance(run, RoundStep):  # control step
+                st = run
+                if st.kind == "stage":
+                    if st.reg:
+                        regs[st.reg] = list(W)
+                    if st.src == "w":
+                        X = list(W)
+                    if st.init == "identity":
+                        W = [ident_fn(v) for v in X]
+                    elif st.init == "x":
+                        W = [jax.tree.map(np.copy, v) for v in X]
+                    elif st.init != "w":
+                        W = list(regs[st.init])
+                else:  # merge
+                    other = X if st.reg == "$x" else regs[st.reg]
+                    _record_op()
+                    W = [op(W[q], other[q]) for q in range(p)]
+                continue
+            groups = _axis_groups(sched, run[0].axis)
+            if run[0].kind == "seg_shift":
+                self._run_segmented(run, X, W, op, ident_fn, groups,
+                                    _run_seg_count(run, sched))
+            elif run[0].kind == "scan_reduce":
+                prefix = self._run_scan_reduce(run, X, W, op, ident_fn,
+                                               groups)
+                if run[-1].reg:
+                    regs[run[-1].reg] = prefix
+            else:
+                self._run_steps(run, X, W, op, ident_fn, groups)
+        outs = []
+        for o in sched.outputs:
+            vals = W if o == "$w" else regs[o]
+            outs.append(jax.tree.map(
+                lambda *ws: np.stack(ws, axis=0), *vals))
+        return outs[0] if len(outs) == 1 else tuple(outs)
+
+    def _run_steps(self, steps, X, W, op, ident_fn, groups):
+        gathered: dict = {}
+        for st in steps:
             if st.kind == "shift":
-                if st.send == "x":
-                    payload = V
-                elif st.send == "w":
-                    payload = W
-                else:
-                    payload = [op(W[q], V[q]) for q in range(p)]
-                    _record_op()
-                _record_round(payload[0])
-                ok = (lambda q: q >= st.bound) if st.mask == "ge" else \
-                    (lambda q: q > st.bound)
-                nw = list(W)
-                for q in range(st.skip, p):
-                    if ok(q):
-                        recv = payload[q - st.skip]
-                        nw[q] = recv if st.combine == "copy" else \
-                            op(recv, W[q])
-                if st.combine == "op":
-                    _record_op()
-                W = nw
+                recorded = False
+                for g in groups:
+                    pg = len(g)
+                    if st.send == "x":
+                        payload = [X[i] for i in g]
+                    elif st.send == "w":
+                        payload = [W[i] for i in g]
+                    else:
+                        payload = [op(W[i], X[i]) for i in g]
+                    if not recorded:
+                        if st.send == "w_op_x":
+                            _record_op()
+                        _record_round(payload[0])
+                        if st.combine == "op":
+                            _record_op()
+                        recorded = True
+                    ok = (lambda q: q >= st.bound) if st.mask == "ge" \
+                        else (lambda q: q > st.bound)
+                    old = [W[i] for i in g]
+                    for q in range(st.skip, pg):
+                        if ok(q):
+                            recv = payload[q - st.skip]
+                            W[g[q]] = recv if st.combine == "copy" \
+                                else op(recv, old[q])
             elif st.kind == "exchange":
-                _record_round(W[0])
+                _record_round(W[groups[0][0]])
                 _record_op(2)
-                W = [op(W[q ^ st.skip], W[q]) if q & st.skip
-                     else op(W[q], W[q ^ st.skip]) for q in range(p)]
+                for g in groups:
+                    old = [W[i] for i in g]
+                    for q, i in enumerate(g):
+                        j = q ^ st.skip
+                        W[i] = op(old[j], old[q]) if q & st.skip \
+                            else op(old[q], old[j])
             elif st.kind == "allgather":
                 _record_allgather()
-                gathered = V
+                for gi, g in enumerate(groups):
+                    gathered[gi] = [X[i] for i in g]
             elif st.kind == "fold":
                 _record_op(st.fold_count)
-                nw = []
-                for q in range(p):
-                    acc = ident_fn(V[q])
-                    for i in range(q):
-                        acc = op(acc, gathered[i])
-                    nw.append(acc)
-                W = nw
+                for gi, g in enumerate(groups):
+                    got = gathered[gi]
+                    for q, i in enumerate(g):
+                        acc = ident_fn(X[i])
+                        for t in range(q):
+                            acc = op(acc, got[t])
+                        W[i] = acc
             elif st.kind == "bcast":
                 _record_allgather()
-                W = [W[st.root] for _ in range(p)]
-        return jax.tree.map(lambda *ws: np.stack(ws, axis=0), *W)
+                for g in groups:
+                    root_val = W[g[st.root]]
+                    for i in g:
+                        W[i] = root_val
 
-    def _execute_segmented(self, sched, V, op, ident_fn, x_like):
-        p = len(V)
-        S = sched.n_segments
-        Vs = [jax.tree.map(lambda a: _np_split(a, S), v) for v in V]
-        R = [ident_fn(v) for v in Vs]
-        cur = [jax.tree.map(lambda a: a[0].copy(), v) for v in Vs]
+    def _run_scan_reduce(self, steps, X, W, op, ident_fn, groups):
+        prefix = [ident_fn(v) for v in X]
+        for st in steps:
+            _record_round(W[groups[0][0]])
+            _record_op(3)
+            for g in groups:
+                old = [W[i] for i in g]
+                for q, i in enumerate(g):
+                    j = q ^ st.skip
+                    if q & st.skip:  # partner covers lower ranks
+                        prefix[i] = op(old[j], prefix[i])
+                        W[i] = op(old[j], old[q])
+                    else:
+                        W[i] = op(old[q], old[j])
+        return prefix
+
+    def _run_segmented(self, steps, X, W, op, ident_fn, groups, S):
+        state = []
+        for g in groups:
+            Vs = [jax.tree.map(lambda a: _np_split(a, S), X[i])
+                  for i in g]
+            R = [ident_fn(v) for v in Vs]
+            cur = [jax.tree.map(lambda a: a[0].copy(), v) for v in Vs]
+            state.append((Vs, R, cur))
         seg_of = (lambda v, s: jax.tree.map(lambda a: a[s], v))
-        for st in sched.steps:
-            _record_round(cur[0])
-            recv = [None] + cur[:-1]  # neighbour shift r-1 -> r
+        for st in steps:
+            _record_round(state[0][2][0])
             if st.prep:
                 _record_op()
-            ncur = list(cur)
-            for q in range(p):
-                s = st.t + 1 - q
-                valid = q >= 1 and 0 <= s < S
-                sc = min(max(s, 0), S - 1)
-                base = recv[q] if valid else ident_fn(seg_of(Vs[q], sc))
-                if valid:
-                    R[q] = jax.tree.map(
-                        lambda acc, b: _np_set_seg(acc, sc, b),
-                        R[q], base)
-                if st.prep:
-                    ncur[q] = op(base, seg_of(Vs[q], sc))
-            cur = ncur
-        out = [jax.tree.map(_np_unsplit, R[q],
-                            jax.tree.map(np.asarray, V[q]))
-               for q in range(p)]
-        return jax.tree.map(lambda *ws: np.stack(ws, axis=0), *out)
+            for gi, g in enumerate(groups):
+                Vs, R, cur = state[gi]
+                pg = len(g)
+                recv = [None] + cur[:-1]  # neighbour shift r-1 -> r
+                ncur = list(cur)
+                for q in range(pg):
+                    s = st.t + 1 - q
+                    valid = q >= 1 and 0 <= s < S
+                    sc = min(max(s, 0), S - 1)
+                    base = recv[q] if valid else \
+                        ident_fn(seg_of(Vs[q], sc))
+                    if valid:
+                        R[q] = jax.tree.map(
+                            lambda acc, b: _np_set_seg(acc, sc, b),
+                            R[q], base)
+                    if st.prep:
+                        ncur[q] = op(base, seg_of(Vs[q], sc))
+                state[gi] = (Vs, R, ncur)
+        for gi, g in enumerate(groups):
+            Vs, R, _ = state[gi]
+            for q, i in enumerate(g):
+                W[i] = jax.tree.map(_np_unsplit, R[q],
+                                    jax.tree.map(np.asarray, X[i]))
+
+
+def _axis_groups(sched: Schedule, axis_tag):
+    """Independent rank groups of one axis of a (possibly composed)
+    schedule: flat ranks are row-major over ``sched.axes``; a step over
+    axis j acts within each group obtained by fixing every other
+    coordinate — the simulator twin of a named-axis collective."""
+    p = sched.p
+    if axis_tag is None or not sched.axes:
+        return [list(range(p))]
+    names = [name for name, _ in sched.axes]
+    sizes = [size for _, size in sched.axes]
+    j = names.index(axis_tag)
+    strides = [1] * len(sizes)
+    for i in range(len(sizes) - 2, -1, -1):
+        strides[i] = strides[i + 1] * sizes[i + 1]
+    others = [range(s) for i, s in enumerate(sizes) if i != j]
+    groups = []
+    for combo in itertools.product(*others):
+        coords = list(combo)
+        coords.insert(j, 0)
+        base = sum(c * strides[i] for i, c in enumerate(coords))
+        groups.append([base + k * strides[j] for k in range(sizes[j])])
+    return groups
 
 
 def _np_set_seg(acc, s: int, value):
@@ -714,6 +1294,9 @@ def _witness_payload(name: str, p: int, n0: int, seed: int):
 
 def _host_reference(kind: str, x, op, ident_fn, p: int):
     V = [jax.tree.map(lambda a: np.asarray(a)[q], x) for q in range(p)]
+    if kind == "scan_total":
+        return (_host_reference("exclusive", x, op, ident_fn, p),
+                _host_reference("allreduce", x, op, ident_fn, p))
     out = []
     if kind == "exclusive":
         acc = ident_fn(V[0])
@@ -733,28 +1316,48 @@ def _host_reference(kind: str, x, op, ident_fn, p: int):
     return jax.tree.map(lambda *ws: np.stack(ws, axis=0), *out)
 
 
+def _max_seg(sched: Schedule) -> int:
+    return max((st.seg or sched.n_segments for st in sched.steps
+                if st.kind == "seg_shift"), default=1)
+
+
+def expected_round_bytes(sched: Schedule, per_rank) -> int:
+    """The schedule's per-round byte law summed over its rounds: one
+    m/S-byte segment per pipelined ring round, the full payload per
+    shift/exchange/scan_reduce round (all-gathers are accounted
+    separately, as in ``ScanPlan.bytes_on_wire``)."""
+    leaves = [np.asarray(t) for t in jax.tree.leaves(per_rank)]
+    total = 0
+    for st in sched.steps:
+        if not st.is_round:
+            continue
+        if st.kind == "seg_shift":
+            S = st.seg or sched.n_segments
+            total += sum(-(-t.size // S) * t.dtype.itemsize
+                         for t in leaves)
+        else:
+            total += sum(t.size * t.dtype.itemsize for t in leaves)
+    return total
+
+
 def verify_plan(plan, *, rank_elems: int = 2, seed: int = 0) -> dict:
-    """Execute ``plan``'s schedule(s) in the numpy simulator against a
+    """Execute ``plan``'s schedule in the numpy simulator against a
     sequential host reference; returns measured-vs-predicted stats.
 
-    Multi-axis plans are verified per sub-plan.  Used by the dry-run
+    Since the composition refactor every plan — single-axis,
+    multi-axis (composed into one axis-annotated schedule) and
+    scan_total — verifies through the same path.  Used by the dry-run
     (every cell's resolved scan plans) and the benchmark ``--check``
     smoke modes so plan/measurement drift fails fast, without devices.
     """
-    if plan.sub_plans:
-        subs = [verify_plan(s, rank_elems=rank_elems, seed=seed)
-                for s in plan.sub_plans]
-        return {"algorithm": plan.algorithm, "p": plan.p,
-                "segments": plan.segments,
-                "ok": all(s["ok"] for s in subs), "sub": subs}
     m = monoid_lib.get(plan.spec.monoid)
     op = monoid_lib.NUMPY_OPS.get(m.name, m.op)
     ident_fn = monoid_lib.NUMPY_IDENTITY.get(
         m.name, lambda t: jax.tree.map(np.asarray, m.identity_like(t)))
-    S = max(1, plan.segments)
+    sched = plan.schedule()
+    S = max(_max_seg(sched), 1)
     n0 = S * rank_elems
     x = _witness_payload(m.name, plan.p, n0, seed)
-    sched = plan.schedule()
     with collect_stats() as st:
         got = SimulatorExecutor().execute(sched, x, m)
     want = _host_reference(plan.spec.kind, x, op, ident_fn, plan.p)
@@ -762,13 +1365,9 @@ def verify_plan(plan, *, rank_elems: int = 2, seed: int = 0) -> dict:
         np.allclose(g, w, rtol=1e-10, atol=1e-12)
         for g, w in zip(jax.tree.leaves(got), jax.tree.leaves(want)))
     # byte accounting: the witness is built with S | element count, so
-    # the plan's per-round law (one m/S-byte segment per seg round,
-    # full m per shift/exchange round) must match measurement exactly
+    # the schedule's per-round law must match measurement exactly
     per_rank = jax.tree.map(lambda a: np.asarray(a)[0], x)
-    leaves = [np.asarray(t) for t in jax.tree.leaves(per_rank)]
-    div = S if any(s2.kind == "seg_shift" for s2 in sched.steps) else 1
-    bytes_expected = plan.rounds * sum(
-        -(-t.size // div) * t.dtype.itemsize for t in leaves)
+    bytes_expected = expected_round_bytes(sched, per_rank)
     res = {
         "algorithm": plan.algorithm, "p": plan.p,
         "segments": plan.segments,

@@ -6,10 +6,12 @@ elastic re-sharding (different host count) keeps the global stream
 stable.
 
 Packing: variable-length documents are packed into fixed (B, S) windows;
-document offsets are exclusive prefix sums of lengths, computed with
-``scan_api.host_exscan`` — the numpy twin of the device collective (a
-multi-host deployment would hand the same shape to ``scan_api.scan``
-under a mesh for global cross-host offsets).
+document offsets AND document ordinals (the segment-id base) are both
+exclusive prefix sums over the same document stream, computed in one
+pass with ``scan_api.host_fused_exscan`` — the numpy twin of the device
+collective's ``fused_scan`` (a multi-host deployment would hand the
+same shapes to ``scan_api.fused_scan`` under a mesh for global
+cross-host offsets riding one set of rounds).
 """
 
 from __future__ import annotations
@@ -18,7 +20,7 @@ import dataclasses
 
 import numpy as np
 
-from repro.core.scan_api import host_exscan
+from repro.core.scan_api import host_fused_exscan
 
 
 @dataclasses.dataclass(frozen=True)
@@ -72,24 +74,29 @@ class SyntheticLM:
         """Pack docs into (local_batch, seq_len) with position reset.
 
         Offsets of each document in the flat stream are the exclusive
-        prefix sums of document lengths (kernels/ops.exscan on device,
-        scan_api.host_exscan here on the host path).
+        prefix sums of document lengths, and the segment-id base of
+        each document is the exclusive prefix count of documents seen
+        (the running ordinal) — two exscans over the same stream,
+        computed in ONE fused pass (scan_api.host_fused_exscan, the
+        host twin of fused_scan; under elastic re-sharding both would
+        ride the same cross-host rounds).
         """
         cfg = self.cfg
         lengths = np.array([len(d) for d in docs], np.int64)
-        offsets = host_exscan(lengths)
+        offsets, ordinals = host_fused_exscan(
+            [lengths, np.ones_like(lengths)])
         need = self.local_batch * cfg.seq_len
         flat = np.zeros(need, np.int32)
         pos = np.zeros(need, np.int32)
         seg = np.zeros(need, np.int32)
-        for i, d in enumerate(docs):
-            o = int(offsets[i])
+        for d, o, ordinal in zip(docs, offsets, ordinals):
+            o = int(o)
             if o >= need:
                 break
             n = min(len(d), need - o)
             flat[o : o + n] = d[:n]
             pos[o : o + n] = np.arange(n)
-            seg[o : o + n] = i + 1
+            seg[o : o + n] = int(ordinal) + 1
         shape = (self.local_batch, cfg.seq_len)
         return {
             "tokens": flat.reshape(shape),

@@ -58,7 +58,11 @@ def _verify_scan_plans(cfg, mesh) -> list:
     payload (doubling schedules), a 1 MiB context-carry-sized one
     (segmented ring on bandwidth-bound axes) under both "add" and the
     non-commutative "affine" carry monoid, and the non-segmentable
-    "matmul" path.
+    "matmul" path — plus the composed forms the consumers actually
+    issue: the multi-axis batch×model scan (ONE axis-annotated
+    schedule since the composition refactor), the fused
+    exscan+allreduce ("scan_total") that MoE dispatch runs, and a
+    fused k-scan bundle (compression offsets).
     """
     checks = []
     small = 4 * max(cfg.n_experts, 16)  # int32 expert counts
@@ -77,6 +81,37 @@ def _verify_scan_plans(cfg, mesh) -> list:
                     raise RuntimeError(
                         f"scan plan/schedule drift on axis {axis!r} "
                         f"({mono}): {res}")
+        # composed multi-axis (what MoE dispatch runs over batch axes ×
+        # model) and its fused scan_total form — one schedule each
+        maxes = tuple(mesh.axis_names)
+        msizes = tuple(int(mesh.shape[a]) for a in maxes)
+        for kind in ("exclusive", "scan_total"):
+            pl = scan_api.plan(
+                cfg.scan_spec.over(maxes, kind=kind, monoid="add",
+                                   algorithm="auto", segments=None),
+                p=msizes, nbytes=small)
+            res = schedule_lib.verify_plan(pl)
+            checks.append({"axis": maxes, "monoid": "add", "kind": kind,
+                           "nbytes": small, **res})
+            if not res["ok"]:
+                raise RuntimeError(
+                    f"composed {kind} plan/schedule drift over "
+                    f"{maxes}: {res}")
+        # fused k-scan bundle (compression offsets: k tiny same-axis
+        # exscans riding one schedule's rounds)
+        axis = mesh.axis_names[-1]
+        fp = scan_api.plan_fused(
+            [cfg.scan_spec.over(axis, kind="exclusive", monoid="add",
+                                algorithm="auto", segments=None)] * 4,
+            int(mesh.shape[axis]), [16] * 4)
+        res = fp.verify()
+        checks.append({"axis": axis, "monoid": "add", "kind": "fused",
+                       "nbytes": 16, "algorithm": "fused[4]",
+                       "segments": 1, **res})
+        if not res["ok"]:
+            raise RuntimeError(
+                f"fused scan plan/schedule drift on axis {axis!r}: "
+                f"{res}")
     return checks
 
 

@@ -12,11 +12,19 @@ devices) is under the expert's global capacity.  That global position is
 
 computed with the paper's exclusive scan over the data axes — a
 (num_experts,)-int vector per MoE layer per step: exactly the small-m,
-latency-dominated regime the paper targets, so the planner
-(``cfg.scan_spec``, default ``algorithm="auto"``) picks the
-round-optimal schedule for the axis size (123-doubling at the paper's
-scales); benchmarks pin explicit algorithms via
-``scan=ScanSpec(algorithm=...)`` to compare them in-situ.
+latency-dominated regime the paper targets.  The capacity accounting
+also needs the *global* per-expert dispatch counts (the capacity
+allreduce), so both ride ONE fused "scan_total" schedule
+(``scan_api.scan_with_total``): at power-of-two group counts the fused
+(prefix, total) butterfly delivers offsets AND totals in the
+allreduce's ⌈log₂p⌉ rounds instead of exscan + allreduce back to
+back.  The planner (``cfg.scan_spec``, default ``algorithm="auto"``)
+picks the round-optimal schedule for the axis size; benchmarks pin
+explicit algorithms via ``scan=ScanSpec(algorithm=...)`` to compare
+them in-situ (each pin maps onto its with-total variant).  The fused
+totals are exact dispatch counts, so the load-balance metric's
+expert-fraction term comes straight from them — no second top-k pass
+over the full logits outside the manual region.
 
 The per-slot position *within* a device is the Pallas moe_routing kernel
 on TPU and its pure-jnp oracle elsewhere (kernels/ops.py dispatches).
@@ -159,13 +167,16 @@ def moe_ffn(cfg, p, x, mesh):
         positions, counts = kref.moe_routing_ref(top_e, e_pad)
         counts = counts.astype(jnp.int32)  # (e_pad,)
 
-        # ---- the paper's collective: global dispatch offsets ----
+        # ---- the paper's collective: global dispatch offsets fused
+        # with the capacity allreduce (one scan_total schedule) ----
         if len(scan_axes) >= 1 and n_groups > 1:
-            offsets = scan_api.scan(counts, cfg.scan_spec.over(
-                scan_axes if len(scan_axes) > 1 else scan_axes[0],
-                kind="exclusive", monoid="add"))
+            offsets, totals = scan_api.scan_with_total(
+                counts, cfg.scan_spec.over(
+                    scan_axes if len(scan_axes) > 1 else scan_axes[0],
+                    kind="exclusive", monoid="add"))
         else:
             offsets = jnp.zeros_like(counts)
+            totals = counts
 
         cap = max(8, int(cfg.capacity_factor * n0 * k / e_pad))
         cap_global = cap * n_groups
@@ -212,12 +223,16 @@ def moe_ffn(cfg, p, x, mesh):
                                tiled=True)
             kept = lax.all_gather(kept.reshape(1, n0, k), "model", axis=0,
                                   tiled=True)
-        return y.reshape(B_l, S_l, d), kept.reshape(B_l, S_l, k)
+        # totals: global per-expert dispatch counts (identical on every
+        # rank — replicated dispatch computes the same counts, sharded
+        # dispatch all-reduced them in the fused scan)
+        return (y.reshape(B_l, S_l, d), kept.reshape(B_l, S_l, k),
+                totals)
 
     bt_spec = bt if bt else None
     seq_spec = "model" if seq_sp else None
     wspec = bt_w if ws else None  # weight-stationary: keep FSDP dim
-    y, kept = jax.shard_map(
+    y, kept, totals = jax.shard_map(
         local_moe,
         mesh=mesh,
         in_specs=(
@@ -228,18 +243,20 @@ def moe_ffn(cfg, p, x, mesh):
             P("model", None, wspec),
         ),
         out_specs=(P(bt_spec, seq_spec, None),
-                   P(bt_spec, seq_spec, None)),
+                   P(bt_spec, seq_spec, None),
+                   P(None)),
         check_vma=False,
     )(x, p["router"], p["moe_gate"], p["moe_up"], p["moe_down"])
 
     # ---- metrics computed under GSPMD (outside the manual region) ----
+    # the fused scan's totals are the exact global (token, slot) counts
+    # per expert, so the load-balance fraction term needs no second
+    # routing pass: frac_e = totals_e / n_tokens
     logits = jnp.einsum("bsd,de->bse", x, p["router"]).astype(jnp.float32)
     emask = jnp.arange(e_pad) < e_real
     logits = jnp.where(emask, logits, -jnp.inf)
     probs = jax.nn.softmax(logits, axis=-1)
-    top_p, top_e = lax.top_k(probs, k)
-    onehot = jax.nn.one_hot(top_e, e_pad, dtype=jnp.float32).sum(axis=-2)
-    frac = onehot.reshape(-1, e_pad).mean(axis=0)
+    frac = totals.astype(jnp.float32) / (B * S)
     pmean = probs.reshape(-1, e_pad).mean(axis=0)
     lb = e_real * jnp.sum(frac[:e_real] * pmean[:e_real]) / k
     dropped = 1.0 - jnp.mean(kept)

@@ -7,9 +7,13 @@ fixed-size (k_max) for static shapes; each device may use fewer slots
 (threshold crossing) and the *compact* layout offsets — where rank r's
 entries start in the concatenated global value array — are the
 exclusive prefix sums of per-rank counts, computed with the paper's
-exscan.  The algorithm is planner-selected (``ScanSpec``-driven like
-every other exscan site; the legacy ``algorithm=`` kwarg remains as a
-compatibility alias).
+exscan.  One offset exscan is needed PER LEAF GROUP; they are k
+concurrent scalar scans over the same axis, so they route through
+``scan_api.fused_scan``: the planner packs them into one payload and
+all k ride a single schedule's rounds (α·q once, not k·α·q — the
+paper's latency argument applied across payloads).  The algorithm is
+planner-selected (``ScanSpec``-driven like every other exscan site;
+the legacy ``algorithm=`` kwarg remains as a compatibility alias).
 
 Used inside shard_map over the data axes when
 ``TrainConfig.grad_compression_fraction`` is set (launch/train.py path
@@ -23,7 +27,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.core.scan_api import ScanSpec, scan
+from repro.core.scan_api import ScanSpec, fused_scan
 
 # Per-rank slot counts are a tiny int vector — the paper's small-m
 # regime, where "auto" picks the round-optimal schedule for the p at
@@ -81,16 +85,21 @@ def sparse_gradient_sync(
     synced = tree.unflatten([o[0] for o in out])
     new_err = tree.unflatten([o[1] for o in out])
 
-    # compact layout: this rank's write offset for each leaf = exscan of
-    # per-rank slot counts (all k here; variable under thresholding) —
-    # the paper's collective in its small-m regime.
-    counts = jnp.array([max(1, int(g.size * k_fraction))
-                        for g in flat_g], jnp.int32)
+    # compact layout: this rank's write offset for each leaf = exscan
+    # of its per-rank slot count (all k here; variable under
+    # thresholding, where each leaf group's count is computed
+    # independently).  The k per-leaf scans go through fused_scan,
+    # which packs them back into one payload riding a single
+    # schedule's rounds — same wire cost as the old hand-packed
+    # (k,)-vector scan, but each offset is now its own planned scan.
     ospec = (spec if spec is not None else OFFSETS_SPEC)
     if algorithm is not None:  # legacy string path
         ospec = ospec.over(axis_name, algorithm=algorithm)
-    offsets = scan(counts, ospec.over(axis_name, kind="exclusive",
-                                      monoid="add"))
+    ospec = ospec.over(axis_name, kind="exclusive", monoid="add")
+    counts = [jnp.int32(max(1, int(g.size * k_fraction)))
+              for g in flat_g]
+    offs = fused_scan([(c, ospec) for c in counts])
+    offsets = jnp.stack(offs)
     return synced, new_err, {"compact_offsets": offsets}
 
 

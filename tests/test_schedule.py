@@ -127,11 +127,16 @@ def test_plan_schedule_is_inspectable_without_tracing():
     ringpl = plan(ScanSpec(algorithm="ring", segments=4), p=8,
                   nbytes=1024)
     assert "S=4" in ringpl.schedule().describe()
-    # multi-axis plans expose per-axis schedules via sub_plans
+    # multi-axis plans compose into ONE axis-annotated schedule (the
+    # sub_plans remain inspectable provenance)
     mpl = plan(ScanSpec(algorithm="123", axis_name=("pod", "data")),
                p=(2, 4), nbytes=64)
-    with pytest.raises(ValueError, match="sub_plans"):
-        mpl.schedule()
+    msched = mpl.schedule()
+    assert msched.rounds == mpl.rounds
+    assert msched.op_applications == mpl.op_applications
+    assert msched.axes == (("pod", 2), ("data", 4))
+    assert "@data" in msched.describe() and "@pod" in msched.describe()
+    assert mpl.algorithm.startswith("composite(")
     assert mpl.sub_plans[0].schedule().rounds == mpl.sub_plans[0].rounds
 
 
@@ -148,10 +153,17 @@ def test_verify_plan_reports_drift_free():
              nbytes=1 << 20))
     assert res["ok"] and res["algorithm"] == "ring" \
         and res["segments"] > 1, res
+    # multi-axis plans verify as ONE composed schedule now
     res = schedule_lib.verify_plan(
         plan(ScanSpec(algorithm="auto", axis_name=("pod", "data")),
              p=(2, 8), nbytes=256))
-    assert res["ok"] and all(s["ok"] for s in res["sub"])
+    assert res["ok"] and res["algorithm"].startswith("composite("), res
+    assert res["rounds_measured"] == res["rounds_predicted"]
+    # ... and so do fused exscan+allreduce ("scan_total") plans
+    res = schedule_lib.verify_plan(
+        plan(ScanSpec(kind="scan_total", algorithm="auto"), p=16,
+             nbytes=64))
+    assert res["ok"] and res["algorithm"] == "fused_doubling", res
 
 
 def test_matmul_monoid_never_segments():
