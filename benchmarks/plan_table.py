@@ -4,37 +4,60 @@ No devices, no tracing: for each rank count p and payload size m the
 rows give the chosen algorithm, its planner-chosen segment count S
 (the pipelined ring splits the payload into S blocks and streams them
 through p−2+S neighbour rounds), predicted rounds and cost-model
-latency under both interconnect tiers (ICI intra-pod, DCI cross-pod;
-launch/mesh.py parameters), plus the rounds *measured* by executing the
-chosen plan's schedule in the numpy simulator executor — plan vs
-measurement drift is visible in the table and fails the build in
-``--check`` mode (CI smoke).  This is the paper's "regimes" story made
-executable: 123-doubling owns the small-m rows, the pipelined
-segmented ring takes over as m grows.
+latency under both interconnect tiers (ICI intra-pod, DCI cross-pod),
+plus the rounds *measured* by executing the chosen plan's schedule in
+the numpy simulator executor — plan vs measurement drift is visible in
+the table and fails the build in ``--check`` mode (CI smoke).  This is
+the paper's "regimes" story made executable: 123-doubling owns the
+small-m rows, the pipelined segmented ring takes over as m grows.
 
-Three further sections cover the composition/fusion refactor:
+Pricing provenance (the calibration refactor): ``--profile PATH``
+loads a **calibrated** :class:`~repro.core.scan_api.CostProfile`
+(a ``profile_*.json`` file, or a store directory — the latest profile
+wins; see ``python -m repro.core.tune --simulate``).  Decisions are
+then made under the *measured* constants while ``cost_modeled_us``
+keeps the hand-guessed default pricing next to ``cost_us`` —
+measured-vs-modeled, the paper's empirical discipline in one table.
 
-  * ``plan2d/…`` — composed multi-axis plans (ONE axis-annotated
-    schedule), simulator-verified like the single-axis rows;
-  * ``fused/…`` — k concurrent small scans fused vs serial: the
-    ``rounds_fused`` column shows the single-scan round count the
-    packed payload rides (not k×), ``rounds_serial`` what k separate
-    scans would pay, and ``--check`` executes the fused schedule;
-  * ``--verbose`` prints :func:`scan_api.plan_cache_info` — the table
-    itself exercises the plan cache heavily.
+Two decision-boundary sections ride along:
+
+  * ``crossover/…`` — the paper-style crossover table: per tier and p,
+    the smallest m (bytes, binary-searched) where the segmented ring's
+    best plan beats 123-doubling, under both the active and the
+    default pricing (``m_star`` vs ``m_star_modeled``);
+  * ``pin/…`` — small-m cells where the default profile picks ``123``;
+    ``--check`` fails if the active (fitted) profile flips any of them
+    away from ``123`` (calibration must never lose the paper's
+    headline small-message decision).
+
+Further sections cover the composition/fusion refactor: ``plan2d/…``
+(composed multi-axis plans, simulator-verified), ``fused/…`` (k
+concurrent scans fused vs serial), and ``--verbose`` prints
+:func:`scan_api.plan_cache_info`.  ``--json [PATH]`` additionally
+writes the whole table as ``BENCH_plan_table.json`` so the perf
+trajectory is machine-readable across PRs.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
+import os
 
 from repro.core import scan_api
 from repro.core import schedule as schedule_lib
+from repro.core import tune
 from repro.core.scan_api import ScanSpec, plan, plan_fused
-from repro.launch.mesh import DCI_COST, ICI_COST
+from repro.launch import mesh as mesh_lib
 
 PS = (8, 36, 256, 512)
 MS = (8, 1024, 65_536, 1_048_576, 16_777_216)  # payload bytes
+
+# small-m cells eligible for the 123 decision pin (--check gate)
+SMALL_MS = (8, 64)
+
+# crossover search range: the smallest m where the ring beats 123
+CROSSOVER_LO, CROSSOVER_HI = 8, 1 << 26
 
 # composed multi-axis cells: (major, minor) rank grids
 PS_2D = ((2, 8), (2, 36), (4, 64))
@@ -44,16 +67,69 @@ MS_2D = (8, 65_536)
 FUSED_K = 4
 MS_FUSED = (8, 1024, 1_048_576)
 
-TIERS = (("ici", ICI_COST), ("dci", DCI_COST))
+DEFAULT_JSON = "BENCH_plan_table.json"
 
 
-def run(csv_rows: list, check: bool = False):
+def _load_profile(path: str | None):
+    """--profile resolution: None -> defaults; file -> that profile;
+    directory -> the most recently written profile in it."""
+    if path is None:
+        return mesh_lib.DEFAULT_PROFILE
+    if os.path.isdir(path):
+        prof = tune.latest_profile(path)
+        if prof is None:
+            raise SystemExit(f"no readable profile_*.json under {path!r}")
+        return prof
+    return tune.load_profile_file(path)
+
+
+def _tiers(active):
+    """(tier, active_cm, default_cm) triples; tiers the default profile
+    does not know fall back to the active kernel for both columns."""
+    default = dict(mesh_lib.DEFAULT_PROFILE.tiers)
+    return [(name, cm, default.get(name, cm)) for name, cm in
+            active.tiers]
+
+
+def crossover_m(p: int, cm, lo: int = CROSSOVER_LO,
+                hi: int = CROSSOVER_HI):
+    """Smallest payload m (bytes) where the segmented ring's best plan
+    costs less than 123-doubling under ``cm`` (binary search on the
+    monotone α/β trade-off), or None if 123 holds through ``hi``."""
+    ring = ScanSpec(kind="exclusive", monoid="add", algorithm="ring")
+    s123 = ScanSpec(kind="exclusive", monoid="add", algorithm="123")
+
+    def ring_wins(m: int) -> bool:
+        return plan(ring, p=p, nbytes=m, cost_model=cm).cost < \
+            plan(s123, p=p, nbytes=m, cost_model=cm).cost
+
+    if ring_wins(lo):
+        return lo
+    if not ring_wins(hi):
+        return None
+    while lo + 1 < hi:
+        mid = (lo + hi) // 2
+        if ring_wins(mid):
+            hi = mid
+        else:
+            lo = mid
+    return hi
+
+
+def run(csv_rows: list, check: bool = False, profile=None):
+    active = profile or mesh_lib.DEFAULT_PROFILE
     spec = ScanSpec(kind="exclusive", monoid="add", algorithm="auto")
     drift = []
-    for tier, cm in TIERS:
+    tiers = _tiers(active)
+    csv_rows.append(("profile/source", active.source, "pricing"))
+    csv_rows.append(("profile/fingerprint", active.fingerprint(),
+                     "pricing"))
+    for tier, cm, cm_default in tiers:
         for p in PS:
             for m in MS:
                 pl = plan(spec, p=p, nbytes=m, cost_model=cm)
+                pl_model = plan(spec, p=p, nbytes=m,
+                                cost_model=cm_default)
                 res = schedule_lib.verify_plan(pl)
                 key = f"plan/{tier}/p{p}/m{m}"
                 csv_rows.append((key + "/algorithm", pl.algorithm,
@@ -65,13 +141,50 @@ def run(csv_rows: list, check: bool = False):
                                  res["rounds_measured"],
                                  "simulator_executor"))
                 csv_rows.append((key + "/cost_us", pl.cost * 1e6,
-                                 "us_abg_model"))
+                                 f"us_{pl.cost_model_source}_abg"))
+                csv_rows.append((key + "/cost_modeled_us",
+                                 pl_model.cost * 1e6,
+                                 "us_default_abg"))
+                if pl_model.algorithm != pl.algorithm:
+                    csv_rows.append((key + "/algorithm_modeled",
+                                     pl_model.algorithm,
+                                     "default_profile_choice"))
                 if not res["ok"]:
                     drift.append((key, res))
+    # paper-style crossover table: smallest m where the segmented ring
+    # beats 123-doubling, measured (active profile) vs modeled
+    for tier, cm, cm_default in tiers:
+        for p in PS:
+            key = f"crossover/{tier}/p{p}"
+            m_star = crossover_m(p, cm)
+            m_model = crossover_m(p, cm_default)
+            csv_rows.append((key + "/m_star",
+                             "none" if m_star is None else m_star,
+                             "min_m_ring_beats_123"))
+            csv_rows.append((key + "/m_star_modeled",
+                             "none" if m_model is None else m_model,
+                             "min_m_ring_beats_123_default"))
+    # pinned small-m decisions: wherever the default profile picks the
+    # paper's 123-doubling, a fitted profile must not flip it
+    for tier, cm, cm_default in tiers:
+        for p in PS:
+            for m in SMALL_MS:
+                if plan(spec, p=p, nbytes=m,
+                        cost_model=cm_default).algorithm != "123":
+                    continue
+                got = plan(spec, p=p, nbytes=m, cost_model=cm)
+                key = f"pin/{tier}/p{p}/m{m}"
+                csv_rows.append((key + "/algorithm", got.algorithm,
+                                 "small_m_123_pin"))
+                if got.algorithm != "123":
+                    drift.append(
+                        (key, {"pinned": "123",
+                               "got": got.algorithm,
+                               "profile": active.fingerprint()}))
     # composed multi-axis plans: one schedule, drift-checked like the
     # single-axis rows (kind "exclusive" and the fused "scan_total")
     spec2 = spec.over(("pod", "data"))
-    for tier, cm in TIERS:
+    for tier, cm, _ in tiers:
         for p1, p2 in PS_2D:
             for m in MS_2D:
                 for kind in ("exclusive", "scan_total"):
@@ -90,7 +203,7 @@ def run(csv_rows: list, check: bool = False):
                         drift.append((key, res))
     # fused vs serial: k concurrent small scans ride ONE schedule's
     # rounds when the α saving beats the packed payload's β cost
-    for tier, cm in TIERS:
+    for tier, cm, _ in tiers:
         for p in PS:
             for m in MS_FUSED:
                 fp = plan_fused([spec] * FUSED_K, p, [m] * FUSED_K,
@@ -122,16 +235,42 @@ def run(csv_rows: list, check: bool = False):
     return csv_rows
 
 
+def write_json(rows: list, path: str, profile) -> None:
+    """Machine-readable benchmark output (BENCH_plan_table.json): the
+    CSV rows plus the pricing provenance that produced them."""
+    with open(path, "w") as f:
+        json.dump({
+            "schema_version": 1,
+            "benchmark": "plan_table",
+            "profile": profile.provenance(),
+            "rows": [[k, v, note] for k, v, note in rows],
+        }, f, indent=1, sort_keys=True)
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--check", action="store_true",
                     help="fail if any plan disagrees with the "
-                         "simulator-executed schedule (CI smoke)")
+                         "simulator-executed schedule, or a fitted "
+                         "profile flips a pinned small-m 123 decision "
+                         "(CI smoke)")
     ap.add_argument("--verbose", action="store_true",
                     help="also print plan-cache hit/miss counters")
+    ap.add_argument("--profile", default=None,
+                    help="calibrated CostProfile: a profile_*.json "
+                         "file or a store directory (latest wins)")
+    ap.add_argument("--json", nargs="?", const=DEFAULT_JSON,
+                    default=None, metavar="PATH",
+                    help=f"also write rows as JSON "
+                         f"(default {DEFAULT_JSON})")
     args = ap.parse_args()
-    for r in run([], check=args.check):
+    prof = _load_profile(args.profile)
+    rows = run([], check=args.check, profile=prof)
+    for r in rows:
         print(",".join(str(x) for x in r))
+    if args.json:
+        write_json(rows, args.json, prof)
+        print(f"wrote {args.json}")
     if args.verbose:
         info = scan_api.plan_cache_info()
         print(f"plan_cache,hits={info['hits']},misses={info['misses']},"

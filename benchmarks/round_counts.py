@@ -9,10 +9,13 @@ packed into one payload ride the SINGLE-scan round count, not k× —
 from __future__ import annotations
 
 import argparse
+import json
 
 from repro.core import oracle
 from repro.core import schedule as schedule_lib
 from repro.core.scan_api import ScanSpec, plan, plan_fused
+
+DEFAULT_JSON = "BENCH_round_counts.json"
 
 PS = (4, 8, 16, 32, 36, 64, 128, 256, 512, 1024)
 RING_PS = (4, 8, 16, 36, 64)  # simulator-executed, keep p moderate
@@ -69,6 +72,18 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--check", action="store_true",
                     help="fail on plan-vs-simulator drift (CI smoke)")
+    ap.add_argument("--json", nargs="?", const=DEFAULT_JSON,
+                    default=None, metavar="PATH",
+                    help=f"also write rows as JSON "
+                         f"(default {DEFAULT_JSON})")
     args = ap.parse_args()
-    for r in run([], check=args.check):
+    rows = run([], check=args.check)
+    for r in rows:
         print(",".join(str(x) for x in r))
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"schema_version": 1,
+                       "benchmark": "round_counts",
+                       "rows": [[k, v, note] for k, v, note in rows]},
+                      f, indent=1, sort_keys=True)
+        print(f"wrote {args.json}")

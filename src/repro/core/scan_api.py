@@ -76,7 +76,7 @@ from repro.core import schedule as schedule_lib
 
 @dataclasses.dataclass(frozen=True)
 class CostModel:
-    """α-β-γ communication cost model for algorithm selection.
+    """The immutable α-β-γ *pricing kernel* for algorithm selection.
 
     ``cost = alpha * latency_hops + beta * serial_bytes
            + gamma * op_applications * payload_bytes * monoid.op_cost``
@@ -87,20 +87,170 @@ class CostModel:
     beta: seconds per byte on the bandwidth-critical path.
     gamma: seconds per byte touched by one ⊕ application (HBM streaming
       of the two operands), scaled by the monoid's relative op cost.
+    source: provenance of the constants — "default" (hand-guessed
+      values) or "calibrated" (fitted by :mod:`repro.core.tune` from
+      measured schedule timings).  Part of equality/hash, so plans
+      priced under a calibrated model never alias cached plans priced
+      under identical-looking defaults.
     """
 
     alpha: float = 1e-6  # ICI launch+hop latency
     beta: float = 1.0 / 50e9  # ICI link bandwidth
     gamma: float = 2.0 / 819e9  # HBM streaming for one ⊕
+    source: str = "default"  # "default" | "calibrated"
+
+    def parts(self, *, hops: int, serial_bytes: float, ops: int,
+              payload_bytes: int, op_cost: float = 1.0) -> dict:
+        """The three cost components, separately (``explain()`` uses
+        them to say *why* a candidate lost)."""
+        return {
+            "alpha": self.alpha * hops,
+            "beta": self.beta * serial_bytes,
+            "gamma": self.gamma * ops * payload_bytes * op_cost,
+        }
 
     def cost(self, *, hops: int, serial_bytes: float, ops: int,
              payload_bytes: int, op_cost: float = 1.0) -> float:
-        return (self.alpha * hops
-                + self.beta * serial_bytes
-                + self.gamma * ops * payload_bytes * op_cost)
+        return sum(self.parts(
+            hops=hops, serial_bytes=serial_bytes, ops=ops,
+            payload_bytes=payload_bytes, op_cost=op_cost).values())
 
 
 DEFAULT_COST_MODEL = CostModel()
+
+PROFILE_SCHEMA_VERSION = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class CostProfile:
+    """A full pricing *profile*: per-tier :class:`CostModel` kernels
+    plus the provenance that justifies them.
+
+    The planner prices every decision off one of these (directly, or
+    through a per-axis resolver like ``launch.mesh.axis_cost_model``).
+    A profile is either the hand-guessed ``source="default"`` one, or
+    ``source="calibrated"`` — fitted by :mod:`repro.core.tune` from
+    measured schedule timings on a specific mesh, in which case
+    ``mesh_fingerprint`` records which machine the constants describe
+    and ``residuals`` the per-tier relative fit error.
+
+    Attributes:
+      tiers: ``((tier_name, CostModel), ...)`` — e.g. "ici"/"dci".
+      source: "default" | "calibrated".
+      mesh_fingerprint: identity of the mesh the profile was measured
+        on ("" for defaults).
+      axis_tiers: ``((axis_name, tier_name), ...)`` routing mesh axes
+        to tiers (axes not listed use ``default_tier``).
+      default_tier: tier for unlisted axes.
+      residuals: ``((tier_name, relative_rms_residual), ...)`` fit
+        diagnostics from the calibration's non-negative least squares.
+      schema_version: persisted-JSON schema version
+        (:data:`PROFILE_SCHEMA_VERSION`).
+    """
+
+    tiers: tuple
+    source: str = "default"
+    mesh_fingerprint: str = ""
+    axis_tiers: tuple = ()
+    default_tier: str = "ici"
+    residuals: tuple = ()
+    schema_version: int = PROFILE_SCHEMA_VERSION
+
+    def __post_init__(self):
+        for field in ("tiers", "axis_tiers", "residuals"):
+            v = getattr(self, field)
+            if isinstance(v, dict):
+                object.__setattr__(self, field, tuple(v.items()))
+
+    def model(self, tier: str) -> CostModel:
+        for name, cm in self.tiers:
+            if name == tier:
+                return cm
+        raise KeyError(f"profile has no tier {tier!r}; "
+                       f"known: {tuple(n for n, _ in self.tiers)}")
+
+    def tier_for_axis(self, axis_name) -> str:
+        """Tier for a mesh axis name or axis tuple.  A tuple routes to
+        any member's listed NON-default tier first (a collective over
+        ("data", "pod") traverses DCI no matter the tuple order), then
+        to a listed default-tier mapping, then to ``default_tier``."""
+        names = (axis_name,) if isinstance(axis_name, str) else \
+            tuple(axis_name or ())
+        routing = dict(self.axis_tiers)
+        for n in names:
+            tier = routing.get(n)
+            if tier is not None and tier != self.default_tier:
+                return tier
+        for n in names:
+            if n in routing:
+                return routing[n]
+        return self.default_tier
+
+    def for_axis(self, axis_name) -> CostModel:
+        """The pricing kernel for a mesh axis (or axis tuple — the
+        slowest member's tier wins; see :meth:`tier_for_axis`)."""
+        return self.model(self.tier_for_axis(axis_name))
+
+    def provenance(self, default_mesh_fingerprint: str = "") -> dict:
+        """The provenance record consumers log/persist (train prints
+        it, dryrun stores it per cell, the benchmark JSON embeds it) —
+        one shape everywhere.  ``default_mesh_fingerprint`` fills the
+        mesh identity for default profiles, which carry none."""
+        return {
+            "source": self.source,
+            "fingerprint": self.fingerprint(),
+            "mesh_fingerprint": (self.mesh_fingerprint
+                                 or default_mesh_fingerprint),
+            "fit_residuals": dict(self.residuals),
+        }
+
+    def fingerprint(self) -> str:
+        """Stable content hash — the plan-cache and profile-store key.
+        Two profiles with identical constants but different provenance
+        (source/mesh) fingerprint differently."""
+        import hashlib
+
+        blob = repr((self.schema_version, self.source,
+                     self.mesh_fingerprint, self.axis_tiers,
+                     self.default_tier,
+                     tuple((n, cm.alpha, cm.beta, cm.gamma, cm.source)
+                           for n, cm in self.tiers))).encode()
+        return hashlib.sha256(blob).hexdigest()[:12]
+
+    def to_json(self) -> dict:
+        return {
+            "schema_version": self.schema_version,
+            "source": self.source,
+            "mesh_fingerprint": self.mesh_fingerprint,
+            "default_tier": self.default_tier,
+            "axis_tiers": dict(self.axis_tiers),
+            "residuals": dict(self.residuals),
+            "tiers": {
+                name: {"alpha": cm.alpha, "beta": cm.beta,
+                       "gamma": cm.gamma, "source": cm.source}
+                for name, cm in self.tiers
+            },
+            "fingerprint": self.fingerprint(),
+        }
+
+    @classmethod
+    def from_json(cls, obj: dict) -> "CostProfile":
+        if obj.get("schema_version") != PROFILE_SCHEMA_VERSION:
+            raise ValueError(
+                f"cost-profile schema {obj.get('schema_version')!r} "
+                f"!= supported {PROFILE_SCHEMA_VERSION}")
+        return cls(
+            tiers=tuple(
+                (name, CostModel(alpha=t["alpha"], beta=t["beta"],
+                                 gamma=t["gamma"],
+                                 source=t.get("source", "default")))
+                for name, t in sorted(obj["tiers"].items())),
+            source=obj.get("source", "default"),
+            mesh_fingerprint=obj.get("mesh_fingerprint", ""),
+            axis_tiers=tuple(sorted(obj.get("axis_tiers", {}).items())),
+            default_tier=obj.get("default_tier", "ici"),
+            residuals=tuple(sorted(obj.get("residuals", {}).items())))
+
 
 _tls = threading.local()
 
@@ -108,24 +258,45 @@ _tls = threading.local()
 @contextlib.contextmanager
 def use_cost_model(cm):
     """Install ``cm`` as the default cost model for ``scan``/``plan``
-    calls inside the context.  ``cm`` is either a :class:`CostModel` or
-    a callable ``axis_name -> CostModel`` so multi-axis plans can price
-    each sub-axis by its own interconnect tier (e.g.
-    ``launch.mesh.axis_cost_model``: DCI for "pod", ICI otherwise)."""
-    prev = getattr(_tls, "cost_model", None)
-    _tls.cost_model = cm
+    calls inside the context.  ``cm`` is a :class:`CostModel`, a
+    :class:`CostProfile` (axes routed to tiers via its ``axis_tiers``),
+    or a callable ``axis_name -> CostModel`` so multi-axis plans can
+    price each sub-axis by its own interconnect tier (e.g.
+    ``launch.mesh.axis_cost_model``: DCI for "pod", ICI otherwise).
+
+    Re-entrant: contexts nest, each exit restores the previous model
+    (an explicit per-thread stack, so interleaved generators that
+    close out of order fail loudly instead of corrupting the state).
+    """
+    stack = getattr(_tls, "cm_stack", None)
+    if stack is None:
+        stack = _tls.cm_stack = []
+    stack.append(cm)
     try:
         yield cm
     finally:
-        _tls.cost_model = prev
+        popped = stack.pop()
+        if popped is not cm:
+            raise RuntimeError(
+                "use_cost_model contexts exited out of order")
 
 
 def current_cost_model():
+    stack = getattr(_tls, "cm_stack", None)
+    if stack:
+        # use_cost_model(None) means "the defaults", not "inherit"
+        return stack[-1] or DEFAULT_COST_MODEL
+    # backward-compat: PR-1-era direct _tls.cost_model assignment
     return getattr(_tls, "cost_model", None) or DEFAULT_COST_MODEL
 
 
 def _resolve_cm(cm, axis_name) -> CostModel:
-    return cm(axis_name) if callable(cm) else cm
+    if isinstance(cm, CostProfile):
+        return cm.for_axis(axis_name)
+    resolved = cm(axis_name) if callable(cm) else cm
+    if isinstance(resolved, CostProfile):
+        resolved = resolved.for_axis(axis_name)
+    return resolved
 
 
 # ---------------------------------------------------------------------------
@@ -387,14 +558,103 @@ class ScanPlan:
             head += "\n  " + sp.describe().replace("\n", "\n  ")
         return head
 
+    @property
+    def cost_model_source(self) -> str:
+        """Provenance of the constants that priced this plan:
+        "default" (hand-guessed) or "calibrated" (fitted from measured
+        schedule timings by :mod:`repro.core.tune`)."""
+        return self.cost_model.source
+
+    def _cost_parts(self) -> dict:
+        _, op_cost = _monoid_name_and_cost(self.spec.monoid)
+        seg_bytes = -(-self.payload_bytes // self.segments) \
+            if self.payload_bytes else 0
+        return self.cost_model.parts(
+            hops=self.rounds + (self.p - 1) * self.allgathers,
+            serial_bytes=self.bytes_on_wire, ops=self.op_applications,
+            payload_bytes=seg_bytes, op_cost=op_cost)
+
+    def explain(self) -> tuple:
+        """The runner-up table: every candidate algorithm's predicted
+        cost under this plan's cost model, and why each loser lost.
+
+        Returns a tuple of dicts (cheapest first), one per candidate
+        algorithm at its best segment count, with the winner marked
+        ``chosen=True``.  ``why`` names the dominant α/β/γ component of
+        the loser's cost excess over the chosen plan (or notes that the
+        spec pinned the choice).  Composite (multi-axis) plans return
+        the concatenation of their sub-plans' tables, each row tagged
+        with its axis.
+        """
+        if self.sub_plans:
+            return tuple(row for sp in self.sub_plans
+                         for row in sp.explain())
+        free = dataclasses.replace(self.spec, algorithm="auto",
+                                   segments=None)
+        best: dict[str, ScanPlan] = {}
+        for cand in _candidate_plans(free, self.p, self.payload_bytes,
+                                     self.cost_model):
+            cur = best.get(cand.algorithm)
+            if cur is None or (cand.cost, cand.rounds, cand.segments) \
+                    < (cur.cost, cur.rounds, cur.segments):
+                best[cand.algorithm] = cand
+        best[self.algorithm] = self  # the resolved plan speaks for itself
+        chosen_parts = self._cost_parts()
+        pinned = self.spec.algorithm != "auto"
+        rows = []
+        order = sorted(best.values(),
+                       key=lambda pl: (pl.cost, pl.rounds, pl.algorithm))
+        cheapest = order[0]
+        for cand in order:
+            parts = cand._cost_parts()
+            if cand.algorithm == self.algorithm:
+                why = ("pinned by spec" if pinned
+                       else "chosen: minimum α·hops+β·bytes+γ·⊕ cost")
+                if pinned and cand is not cheapest:
+                    why += (f" (auto would pick {cheapest.algorithm}, "
+                            f"{(self.cost - cheapest.cost) * 1e6:.3g}us "
+                            f"cheaper)")
+            else:
+                excess = {k: parts[k] - chosen_parts[k] for k in parts}
+                delta = cand.cost - self.cost
+                if delta >= 0:
+                    dom = max(excess, key=lambda k: excess[k])
+                    why = (f"+{delta * 1e6:.3g}us vs "
+                           f"{self.algorithm}, dominated by {dom} "
+                           f"(+{excess[dom] * 1e6:.3g}us)")
+                else:
+                    # only reachable under a pinned spec: the pin kept
+                    # a cheaper candidate from winning
+                    dom = min(excess, key=lambda k: excess[k])
+                    why = (f"{-delta * 1e6:.3g}us cheaper than pinned "
+                           f"{self.algorithm}, led by {dom} "
+                           f"({excess[dom] * 1e6:.3g}us)")
+            rows.append({
+                "axis": self.spec.axes[-1],
+                "algorithm": cand.algorithm,
+                "segments": cand.segments,
+                "rounds": cand.rounds,
+                "op_applications": cand.op_applications,
+                "allgathers": cand.allgathers,
+                "bytes_on_wire": cand.bytes_on_wire,
+                "cost": cand.cost,
+                "cost_alpha": parts["alpha"],
+                "cost_beta": parts["beta"],
+                "cost_gamma": parts["gamma"],
+                "chosen": cand.algorithm == self.algorithm,
+                "why": why,
+            })
+        return tuple(rows)
+
 
 def _monoid_name_and_cost(monoid) -> tuple[str, float]:
     m = monoid_lib.get(monoid)
     return m.name, getattr(m, "op_cost", 1.0)
 
 
-def _plan_single(spec: ScanSpec, p: int, nbytes: int, cm) -> ScanPlan:
-    """Plan one axis: resolve "auto" by cost, fill predicted counts.
+def _candidate_plans(spec: ScanSpec, p: int, nbytes: int,
+                     cm: CostModel) -> list[ScanPlan]:
+    """Every (algorithm, segment-count) candidate for one axis, priced.
 
     For segmentable algorithms (the pipelined ring) the segment count S
     is part of the optimization: candidates are power-of-two S up to
@@ -402,7 +662,6 @@ def _plan_single(spec: ScanSpec, p: int, nbytes: int, cm) -> ScanPlan:
     priced at α·(p−2+S) + β·(p−2+S)·⌈m/S⌉ + γ·ops·⌈m/S⌉ — the α/β
     trade-off of the paper's large-m pipelining citation.
     """
-    cm = _resolve_cm(cm, spec.axes[-1])
     _, op_cost = _monoid_name_and_cost(spec.monoid)
     mono = monoid_lib.get(spec.monoid)
 
@@ -452,16 +711,32 @@ def _plan_single(spec: ScanSpec, p: int, nbytes: int, cm) -> ScanPlan:
                  if k == spec.kind]
         if not algos:
             raise ValueError(f"no algorithms registered for {spec.kind!r}")
+    return [pl for a in algos for pl in candidates(a)]
+
+
+def _plan_single(spec: ScanSpec, p: int, nbytes: int,
+                 cm: CostModel) -> ScanPlan:
+    """Plan one axis: resolve "auto" by cost, fill predicted counts."""
     # deterministic tie-break: cost, then rounds, name, fewest segments
-    plans = [pl for a in algos for pl in candidates(a)]
+    plans = _candidate_plans(spec, p, nbytes, cm)
     return min(plans, key=lambda pl: (pl.cost, pl.rounds, pl.algorithm,
                                       pl.segments))
 
 
 @functools.lru_cache(maxsize=1024)
-def _plan_cached(spec: ScanSpec, ps: tuple, nbytes: int, cm) -> ScanPlan:
+def _plan_cached(spec: ScanSpec, ps: tuple, nbytes: int,
+                 cms: tuple) -> ScanPlan:
+    """Memoized planning, keyed by *resolved* per-axis cost models.
+
+    ``cms`` is one :class:`CostModel` per axis of ``spec.axes`` — the
+    caller (:func:`plan`) resolves callables/profiles *before* the
+    cache lookup, so the key is the pricing constants themselves (a
+    value fingerprint), never a resolver's object identity.  Per-call
+    closures that resolve to the same constants hit the cache, and
+    installing a recalibrated profile changes the key, invalidating
+    every stale plan at once."""
     if len(ps) == 1:
-        return _plan_single(spec, ps[0], nbytes, cm)
+        return _plan_single(spec, ps[0], nbytes, cms[0])
     # Multi-axis rewrite (DESIGN.md §5): exscan within the minor axis,
     # allreduce of the minor-axis total, exscan of totals over the
     # major axes, then one ⊕ combining outer and inner.  The top-level
@@ -474,10 +749,10 @@ def _plan_cached(spec: ScanSpec, ps: tuple, nbytes: int, cm) -> ScanPlan:
     _, op_cost = _monoid_name_and_cost(spec.monoid)
     axes = spec.axes
     inner = _plan_cached(
-        spec.over(axes[-1]), (ps[-1],), nbytes, cm)
+        spec.over(axes[-1]), (ps[-1],), nbytes, cms[-1:])
     outer = _plan_cached(
         spec.over(axes[:-1] if len(axes) > 2 else axes[0]),
-        ps[:-1], nbytes, cm)
+        ps[:-1], nbytes, cms[:-1])
     if spec.kind == "scan_total":
         # the inner scan_total's total IS the minor-axis allreduce:
         # no separate reduce stage (schedule_lib.compose_total)
@@ -486,11 +761,11 @@ def _plan_cached(spec: ScanSpec, ps: tuple, nbytes: int, cm) -> ScanPlan:
     else:
         reduce_ = _plan_cached(
             spec.over(axes[-1], kind="allreduce", algorithm="auto"),
-            (ps[-1],), nbytes, cm)
+            (ps[-1],), nbytes, cms[-1:])
         subs = (inner, reduce_, outer)
         label = (f"composite({inner.algorithm}+{reduce_.algorithm}"
                  f"+{outer.algorithm})")
-    cm_top = _resolve_cm(cm, axes[-1])  # final ⊕ is local compute
+    cm_top = cms[-1]  # final ⊕ is local compute
     return ScanPlan(
         spec=spec, p=int(np.prod(ps)),
         algorithm=label, payload_bytes=nbytes,
@@ -514,12 +789,15 @@ def plan(spec: ScanSpec, p: int | tuple | None = None, *,
       nbytes: per-rank payload size in bytes (falls back to
         ``spec.payload_bytes``, then 0 — a pure round-count plan).
       cost_model: overrides the ambient :func:`current_cost_model`; a
-        :class:`CostModel` or a per-axis ``axis_name -> CostModel``
-        callable (must be a stable module-level function — it is part
-        of the plan-cache key by identity).
+        :class:`CostModel`, a :class:`CostProfile`, or a per-axis
+        ``axis_name -> CostModel`` callable.
 
-    Plans are cached by (spec, axis sizes, payload bytes, cost model);
-    repeated calls with the same signature return the same object.
+    Plans are cached by (spec, axis sizes, payload bytes, *resolved*
+    per-axis pricing constants): callables/profiles are resolved to one
+    :class:`CostModel` per axis before the lookup, so equal constants
+    hit the cache regardless of resolver identity, and installing a
+    recalibrated profile invalidates stale plans by changing the key.
+    Repeated calls with the same signature return the same object.
     """
     if p is None:
         raise ValueError("plan() needs the axis size(s) p")
@@ -529,8 +807,14 @@ def plan(spec: ScanSpec, p: int | tuple | None = None, *,
             f"got {len(ps)} axis sizes for {len(spec.axes)} axes "
             f"({spec.axes})")
     m_bytes = nbytes if nbytes is not None else (spec.payload_bytes or 0)
-    cm = cost_model or current_cost_model()
-    return _plan_cached(spec, ps, int(m_bytes), cm)
+    cm = cost_model if cost_model is not None else current_cost_model()
+    cms = tuple(_resolve_cm(cm, a) for a in spec.axes)
+    for a, resolved in zip(spec.axes, cms):
+        if not isinstance(resolved, CostModel):
+            raise TypeError(
+                f"cost model for axis {a!r} resolved to "
+                f"{type(resolved).__name__}, expected CostModel")
+    return _plan_cached(spec, ps, int(m_bytes), cms)
 
 
 def plan_cache_clear():

@@ -1,0 +1,513 @@
+"""Cost-model calibration: measure schedules, fit α/β/γ, persist.
+
+The paper's empirical contribution is that *measured* crossovers — not
+modeled constants — decide which exscan algorithm wins on a machine.
+This module turns the planner's hand-guessed α/β/γ defaults into a
+**calibrated, provenance-carrying** :class:`~repro.core.scan_api
+.CostProfile`:
+
+  1. **Microbenchmark harness** — every registered algorithm's
+     *schedule* (the executable IR of :mod:`repro.core.schedule`) is
+     timed over a (p × payload-bytes) sweep.  Two clocks:
+
+       * ``walltime`` — the SPMD executor traced under ``shard_map``
+         on real devices (:func:`measure_schedule_walltime`);
+       * ``simulated`` — the schedule executed in the
+         :class:`~repro.core.schedule.SimulatorExecutor` under
+         ``collect_stats()``, with seconds derived deterministically
+         from the *measured* hop/byte/⊕ counts under a ground-truth
+         cost model (:func:`measure_schedule_simulated`).  Device-free
+         and bit-reproducible, so calibration runs in CI; any drift
+         between the IR's predicted features and the executed
+         schedule's measured counts surfaces as fit residual.
+
+  2. **Fit** — per interconnect tier, non-negative least squares
+     (:func:`nnls`, Lawson–Hanson) of the measured seconds against the
+     IR-derived features (latency hops, serialized bytes, ⊕ bytes)
+     recovers α, β, γ ≥ 0 with a relative-RMS residual diagnostic
+     (:func:`fit_tier`).
+
+  3. **Persistence** — profiles serialize to JSON keyed by mesh
+     fingerprint with schema versioning (:func:`save_profile` /
+     :func:`load_profile`); ``launch.mesh.axis_cost_model`` resolves a
+     calibrated profile before falling back to defaults, and because
+     the plan cache is keyed by resolved pricing constants, installing
+     a new profile invalidates every stale plan.
+
+One-command device-free flow::
+
+    PYTHONPATH=src python -m repro.core.tune --simulate
+    # writes tune/profiles/profile_<mesh-fingerprint>.json and prints
+    # the fitted constants + per-tier fit residuals
+
+after which ``plan(...)`` under ``launch.mesh.axis_cost_model`` yields
+``ScanPlan.cost_model_source == "calibrated"``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import re
+import time
+
+import numpy as np
+
+from repro.core import monoid as monoid_lib
+from repro.core import scan_api
+from repro.core import schedule as schedule_lib
+from repro.core.scan_api import (
+    PROFILE_SCHEMA_VERSION, CostModel, CostProfile)
+
+# Default (p × payload-bytes) sweep: p values straddle powers of two
+# (the 123/two_op boundary cases) and m spans the α-dominated to
+# β-dominated regimes.  Payload sizes are multiples of 512 bytes so
+# every power-of-two segment count S ≤ 64 divides the int64 element
+# count exactly (measured bytes == ceil(m/S) with no padding slack).
+DEFAULT_PS = (2, 3, 4, 5, 7, 8, 9, 12, 16, 17)
+DEFAULT_MS = (512, 8192, 131_072, 1_048_576)
+RING_SEGMENTS = (1, 8, 64)
+
+DEFAULT_PROFILE_DIR = os.path.join("tune", "profiles")
+
+
+# ---------------------------------------------------------------------------
+# Non-negative least squares (Lawson–Hanson active set)
+# ---------------------------------------------------------------------------
+
+
+def nnls(A, b, *, max_iter: int | None = None,
+         tol: float = 1e-12) -> np.ndarray:
+    """Solve ``min ||Ax - b||`` subject to ``x >= 0``.
+
+    The classic Lawson–Hanson active-set method — tiny systems only
+    (calibration fits 3 unknowns), so no scipy dependency."""
+    A = np.asarray(A, dtype=np.float64)
+    b = np.asarray(b, dtype=np.float64).reshape(-1)
+    n = A.shape[1]
+    if max_iter is None:
+        max_iter = 3 * n + 30
+    x = np.zeros(n)
+    passive = np.zeros(n, dtype=bool)
+    w = A.T @ (b - A @ x)
+    for _ in range(max_iter):
+        if passive.all() or w[~passive].max(initial=-np.inf) <= tol:
+            break
+        j = int(np.argmax(np.where(passive, -np.inf, w)))
+        passive[j] = True
+        while True:
+            z = np.zeros(n)
+            cols = np.flatnonzero(passive)
+            sol, *_ = np.linalg.lstsq(A[:, cols], b, rcond=None)
+            z[cols] = sol
+            if (z[cols] > tol).all():
+                x = z
+                break
+            # step toward z until the first passive coordinate hits 0
+            neg = cols[z[cols] <= tol]
+            alpha = min(x[k] / (x[k] - z[k]) for k in neg
+                        if x[k] != z[k])
+            x = x + alpha * (z - x)
+            passive &= x > tol
+            if not passive.any():
+                x = np.zeros(n)
+                break
+        w = A.T @ (b - A @ x)
+    return np.maximum(x, 0.0)
+
+
+# ---------------------------------------------------------------------------
+# Features: the IR-derived regressors the fit prices seconds against
+# ---------------------------------------------------------------------------
+
+
+def schedule_features(sched: "schedule_lib.Schedule", nbytes: int,
+                      op_cost: float = 1.0) -> tuple[float, float, float]:
+    """(latency_hops, serial_bytes, op_bytes) counted off the IR.
+
+    Mirrors the planner's pricing conventions exactly
+    (``scan_api._candidate_plans``): all-gathers cost p−1 ring hops and
+    p·m wire bytes; a pipelined-ring round carries ⌈m/S⌉ bytes; the γ
+    regressor is total ⊕ executions × the per-⊕ segment bytes × the
+    monoid's relative op cost."""
+    p = sched.p
+    seg = max((st.seg or sched.n_segments for st in sched.steps
+               if st.kind == "seg_shift"), default=1)
+    hops = 0.0
+    wire = 0.0
+    for st in sched.steps:
+        if st.is_round:
+            hops += 1
+            wire += -(-nbytes // (st.seg or sched.n_segments)) \
+                if st.kind == "seg_shift" else nbytes
+        elif st.kind in ("allgather", "bcast"):
+            hops += p - 1
+            wire += p * nbytes
+    op_bytes = sched.op_applications * -(-nbytes // seg) * op_cost
+    return hops, wire, op_bytes
+
+
+@dataclasses.dataclass(frozen=True)
+class Sample:
+    """One timed schedule execution: features + the clock reading."""
+
+    tier: str
+    kind: str
+    algorithm: str
+    p: int
+    nbytes: int
+    segments: int
+    hops: float
+    serial_bytes: float
+    op_bytes: float
+    seconds: float
+    clock: str  # "simulated" | "walltime"
+
+
+def _witness(p: int, nbytes: int, seed: int = 0) -> np.ndarray:
+    if nbytes % 8:
+        raise ValueError(f"payload bytes must be a multiple of 8 "
+                         f"(int64 add witness), got {nbytes}")
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, 1 << 30,
+                        size=(p, nbytes // 8)).astype(np.int64)
+
+
+def measure_schedule_simulated(
+        sched: "schedule_lib.Schedule", nbytes: int,
+        truth: CostModel, *, monoid="add",
+        seed: int = 0) -> tuple[float, tuple[float, float, float]]:
+    """Execute ``sched`` in the numpy simulator and read the
+    deterministic simulated clock: seconds = ``truth`` priced on the
+    *measured* hop/byte/⊕ counts of the executed schedule.
+
+    Returns ``(seconds, measured_features)``.  Because the clock is a
+    pure function of measured counts, calibration data generated from
+    a known α/β/γ lets the fit recover those constants exactly (the
+    property the test suite asserts), while any IR-vs-execution drift
+    shows up as residual instead of hiding in noise."""
+    m = monoid_lib.get(monoid)
+    x = _witness(sched.p, nbytes, seed)
+    with schedule_lib.collect_stats() as st:
+        schedule_lib.SimulatorExecutor().execute(sched, x, m)
+    seg = max((s.seg or sched.n_segments for s in sched.steps
+               if s.kind == "seg_shift"), default=1)
+    hops = st.rounds + (sched.p - 1) * st.allgathers
+    wire = sum(st.bytes_per_round) + st.allgathers * sched.p * nbytes
+    op_bytes = st.op_applications * -(-nbytes // seg) * \
+        getattr(m, "op_cost", 1.0)
+    seconds = truth.cost(
+        hops=st.rounds + (sched.p - 1) * st.allgathers,
+        serial_bytes=wire, ops=st.op_applications,
+        payload_bytes=-(-nbytes // seg),
+        op_cost=getattr(m, "op_cost", 1.0))
+    return seconds, (float(hops), float(wire), float(op_bytes))
+
+
+def measure_schedule_walltime(
+        sched: "schedule_lib.Schedule", nbytes: int, *, monoid="add",
+        axis_name: str = "x", repeats: int = 5,
+        seed: int = 0) -> float:
+    """Median walltime of the schedule's SPMD program over ``repeats``
+    executions on the first ``p`` local devices (jit-compiled once,
+    ``block_until_ready`` timed).  Requires ``p`` real devices."""
+    import jax
+    from jax import shard_map
+    from jax.sharding import Mesh
+    from jax.sharding import PartitionSpec as P
+
+    devs = jax.devices()
+    if len(devs) < sched.p:
+        raise RuntimeError(
+            f"walltime calibration needs {sched.p} devices, have "
+            f"{len(devs)}; use --simulate for the device-free clock")
+    m = monoid_lib.get(monoid)
+    mesh = Mesh(np.array(devs[:sched.p]).reshape(sched.p), (axis_name,))
+    ex = schedule_lib.SPMDExecutor(axis_name)
+    fn = jax.jit(shard_map(
+        lambda v: ex.execute(sched, v, m), mesh=mesh,
+        in_specs=P(axis_name), out_specs=P(axis_name)))
+    x = _witness(sched.p, nbytes, seed)
+    jax.block_until_ready(fn(x))  # compile outside the timed region
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(x))
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))
+
+
+def _sweep_cases(ps, ms):
+    """(kind, algorithm, p, m, segments) cells of one tier's sweep:
+    every registered exclusive algorithm (the ring at several pinned
+    segment counts) plus the allreduce butterfly for feature spread."""
+    cases = []
+    for p in ps:
+        for m in ms:
+            for name in scan_api.algorithms("exclusive"):
+                algo = scan_api.get_algorithm("exclusive", name)
+                if algo.segmentable:
+                    elems = max(1, m // 8)
+                    ss = sorted({min(S, elems) for S in RING_SEGMENTS})
+                    cases.extend(("exclusive", name, p, m, S)
+                                 for S in ss)
+                else:
+                    cases.append(("exclusive", name, p, m, 1))
+            for name in scan_api.algorithms("allreduce"):
+                cases.append(("allreduce", name, p, m, 1))
+    return cases
+
+
+def calibration_sweep(tier: str, truth: CostModel, *,
+                      ps=DEFAULT_PS, ms=DEFAULT_MS,
+                      clock: str = "simulated",
+                      monoid="add") -> list[Sample]:
+    """Time every registered algorithm's schedule over the (p × m)
+    sweep on one tier; returns the fit's :class:`Sample` rows."""
+    op_cost = getattr(monoid_lib.get(monoid), "op_cost", 1.0)
+    samples = []
+    for kind, name, p, m, S in _sweep_cases(ps, ms):
+        sched = scan_api.get_algorithm(kind, name).schedule(p, S)
+        feats = schedule_features(sched, m, op_cost)
+        if clock == "simulated":
+            seconds, measured = measure_schedule_simulated(
+                sched, m, truth, monoid=monoid)
+        elif clock == "walltime":
+            seconds, measured = measure_schedule_walltime(
+                sched, m, monoid=monoid), feats
+        else:
+            raise ValueError(f"unknown clock {clock!r}")
+        samples.append(Sample(
+            tier=tier, kind=kind, algorithm=name, p=p, nbytes=m,
+            segments=S, hops=measured[0], serial_bytes=measured[1],
+            op_bytes=measured[2], seconds=seconds, clock=clock))
+    return samples
+
+
+# ---------------------------------------------------------------------------
+# Fitting
+# ---------------------------------------------------------------------------
+
+
+def fit_tier(samples: list[Sample]) -> tuple[CostModel, float]:
+    """Fit one tier's (α, β, γ) by NNLS of seconds against the
+    hop/byte/⊕-byte features; returns the calibrated kernel and the
+    relative RMS residual."""
+    if not samples:
+        raise ValueError("fit_tier needs at least one sample")
+    A = np.array([[s.hops, s.serial_bytes, s.op_bytes]
+                  for s in samples], dtype=np.float64)
+    b = np.array([s.seconds for s in samples], dtype=np.float64)
+    # column scaling: hops ~ 1e1 while byte columns reach 1e7 — put
+    # every regressor on unit norm so lstsq conditioning is sane
+    scale = np.linalg.norm(A, axis=0)
+    scale[scale == 0] = 1.0
+    x = nnls(A / scale, b) / scale
+    resid = float(np.linalg.norm(A @ x - b)
+                  / max(np.linalg.norm(b), 1e-300))
+    return CostModel(alpha=float(x[0]), beta=float(x[1]),
+                     gamma=float(x[2]), source="calibrated"), resid
+
+
+def fit_profile(samples_by_tier: dict, *, mesh_fingerprint: str,
+                axis_tiers=(), default_tier: str = "ici") -> CostProfile:
+    """Fit every tier and assemble the calibrated, provenance-carrying
+    :class:`CostProfile` (per-tier relative-RMS residual diagnostics
+    included)."""
+    tiers, residuals = [], []
+    for tier in sorted(samples_by_tier):
+        cm, resid = fit_tier(samples_by_tier[tier])
+        tiers.append((tier, cm))
+        residuals.append((tier, resid))
+    return CostProfile(
+        tiers=tuple(tiers), source="calibrated",
+        mesh_fingerprint=mesh_fingerprint,
+        axis_tiers=tuple(axis_tiers), default_tier=default_tier,
+        residuals=tuple(residuals))
+
+
+def calibrate(*, simulate: bool = True, truth: CostProfile | None = None,
+              ps=DEFAULT_PS, ms=DEFAULT_MS,
+              mesh_fingerprint: str | None = None,
+              monoid="add") -> CostProfile:
+    """End-to-end calibration: sweep → fit → :class:`CostProfile`.
+
+    ``simulate=True`` (the device-free CI path) reads the deterministic
+    simulated clock under ``truth`` — the profile describing the
+    machine being simulated (default: the launch-layer default ICI/DCI
+    profile).  ``simulate=False`` times the SPMD executor on local
+    devices; every mesh axis of a host machine rides one interconnect,
+    so the walltime path fits a single tier and reuses it for all."""
+    if truth is None:
+        from repro.launch import mesh as mesh_lib  # lazy: no cycle
+
+        truth = mesh_lib.DEFAULT_PROFILE
+    if simulate:
+        samples = {tier: calibration_sweep(
+            tier, cm, ps=ps, ms=ms, clock="simulated", monoid=monoid)
+            for tier, cm in truth.tiers}
+        fp = mesh_fingerprint or "simulated-default"
+    else:
+        import jax
+
+        ps = tuple(p for p in ps if p <= len(jax.devices()))
+        if not ps:
+            raise RuntimeError("no usable device counts for walltime "
+                               "calibration; pass --simulate")
+        local = calibration_sweep(
+            truth.default_tier, truth.model(truth.default_tier),
+            ps=ps, ms=ms, clock="walltime", monoid=monoid)
+        samples = {tier: [dataclasses.replace(s, tier=tier)
+                          for s in local]
+                   for tier, _ in truth.tiers}
+        fp = mesh_fingerprint or local_device_fingerprint()
+    return fit_profile(samples, mesh_fingerprint=fp,
+                       axis_tiers=truth.axis_tiers,
+                       default_tier=truth.default_tier)
+
+
+def local_device_fingerprint() -> str:
+    import jax
+
+    devs = jax.devices()
+    kind = getattr(devs[0], "device_kind", "unknown")
+    return _sanitize(f"{jax.default_backend()}-{kind}-n{len(devs)}")
+
+
+# ---------------------------------------------------------------------------
+# Profile store: JSON keyed by mesh fingerprint, schema-versioned
+# ---------------------------------------------------------------------------
+
+
+def _sanitize(name: str) -> str:
+    return re.sub(r"[^A-Za-z0-9._-]+", "-", name).strip("-") or "default"
+
+
+def profile_dir(directory: str | None = None) -> str:
+    return directory or os.environ.get("REPRO_PROFILE_DIR",
+                                       DEFAULT_PROFILE_DIR)
+
+
+def profile_path(mesh_fingerprint: str,
+                 directory: str | None = None) -> str:
+    return os.path.join(profile_dir(directory),
+                        f"profile_{_sanitize(mesh_fingerprint)}.json")
+
+
+def save_profile(profile: CostProfile,
+                 directory: str | None = None) -> str:
+    """Persist ``profile`` under its mesh fingerprint (atomic
+    write-then-rename, like the checkpoint store's commit)."""
+    path = profile_path(profile.mesh_fingerprint or "default",
+                        directory)
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(profile.to_json(), f, indent=1, sort_keys=True)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+    return path
+
+
+def load_profile_file(path: str) -> CostProfile:
+    with open(path) as f:
+        return CostProfile.from_json(json.load(f))
+
+
+def load_profile(mesh_fingerprint: str,
+                 directory: str | None = None) -> CostProfile | None:
+    """The persisted profile for a mesh fingerprint, or None when
+    missing or written under an incompatible schema version (callers
+    fall back to defaults — an old profile never poisons planning)."""
+    path = profile_path(mesh_fingerprint, directory)
+    if not os.path.exists(path):
+        return None
+    try:
+        return load_profile_file(path)
+    except (ValueError, KeyError, json.JSONDecodeError):
+        return None
+
+
+def latest_profile(directory: str | None = None) -> CostProfile | None:
+    """Most recently written profile in the store (benchmarks'
+    ``--profile DIR`` convenience), or None."""
+    d = profile_dir(directory)
+    if not os.path.isdir(d):
+        return None
+    paths = sorted(
+        (os.path.join(d, f) for f in os.listdir(d)
+         if f.startswith("profile_") and f.endswith(".json")),
+        key=os.path.getmtime, reverse=True)
+    for path in paths:
+        try:
+            return load_profile_file(path)
+        except (ValueError, KeyError, json.JSONDecodeError):
+            continue
+    return None
+
+
+# ---------------------------------------------------------------------------
+# CLI: the one-command calibration flow
+# ---------------------------------------------------------------------------
+
+
+def _parse_ints(text: str) -> tuple[int, ...]:
+    return tuple(int(t) for t in text.split(",") if t)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="Calibrate the scan planner's cost profile from "
+                    "measured schedule timings.")
+    ap.add_argument("--simulate", action="store_true",
+                    help="device-free deterministic simulated clock "
+                         "(CI path); omit to time real devices")
+    ap.add_argument("--out", default=None,
+                    help=f"profile store directory (default "
+                         f"{DEFAULT_PROFILE_DIR!r} or $REPRO_PROFILE_DIR)")
+    ap.add_argument("--fingerprint", default=None,
+                    help="mesh fingerprint key to persist under")
+    ap.add_argument("--ps", type=_parse_ints, default=DEFAULT_PS,
+                    help="comma-separated rank counts to sweep")
+    ap.add_argument("--ms", type=_parse_ints, default=DEFAULT_MS,
+                    help="comma-separated payload bytes to sweep")
+    ap.add_argument("--max-residual", type=float, default=0.05,
+                    help="fail if any tier's relative fit residual "
+                         "exceeds this (decision-boundary guard)")
+    args = ap.parse_args(argv)
+
+    from repro.launch import mesh as mesh_lib
+
+    truth = mesh_lib.DEFAULT_PROFILE
+    profile = calibrate(simulate=args.simulate, truth=truth,
+                        ps=args.ps, ms=args.ms,
+                        mesh_fingerprint=args.fingerprint)
+    residuals = dict(profile.residuals)
+    print(f"calibrated profile (clock="
+          f"{'simulated' if args.simulate else 'walltime'}, "
+          f"mesh={profile.mesh_fingerprint}, "
+          f"fingerprint={profile.fingerprint()}):")
+    for tier, cm in profile.tiers:
+        line = (f"  {tier}: alpha={cm.alpha:.3e} beta={cm.beta:.3e} "
+                f"gamma={cm.gamma:.3e} "
+                f"residual={residuals.get(tier, 0.0):.3e}")
+        if args.simulate:
+            t = truth.model(tier)
+            line += (f"  (truth alpha={t.alpha:.3e} beta={t.beta:.3e} "
+                     f"gamma={t.gamma:.3e})")
+        print(line)
+    path = save_profile(profile, args.out)
+    print(f"wrote {path}")
+    worst = max(residuals.values(), default=0.0)
+    if worst > args.max_residual:
+        print(f"FAIL: fit residual {worst:.3e} exceeds "
+              f"--max-residual {args.max_residual}")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -151,7 +151,8 @@ def _extrapolate(p1, p2, repeats: int):
 
 def run_cell(arch: str, shape_name: str, multi_pod: bool,
              verbose: bool = True, strategy: str = "tp",
-             probes: bool = True, **cfg_overrides) -> dict:
+             probes: bool = True, profile_dir: str | None = None,
+             **cfg_overrides) -> dict:
     cfg = configs.get(arch, sharding_strategy=strategy, **cfg_overrides)
     shape = steps_lib.SHAPES[shape_name]
     ok, reason = steps_lib.applicable(cfg, shape)
@@ -170,6 +171,15 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
 
     mesh = make_production_mesh(multi_pod=multi_pod)
     n_dev = mesh.devices.size
+    # install the calibrated cost profile for this mesh (defaults when
+    # none is persisted) and record the pricing provenance per cell
+    profile = mesh_lib.use_calibrated_profile(mesh,
+                                              directory=profile_dir)
+    cell["cost_profile"] = profile.provenance(
+        mesh_lib.mesh_fingerprint(mesh))
+    if verbose:
+        print(f"  cost profile: {profile.source} "
+              f"fingerprint={profile.fingerprint()}")
     cell["scan_plan_checks"] = _verify_scan_plans(cfg, mesh)
     t0 = time.time()
     # "auto" scan specs price each mesh axis by its interconnect tier
@@ -273,6 +283,9 @@ def main():
     ap.add_argument("--exscan", default=None,
                     choices=["auto", "123", "1doubling", "two_op",
                              "native", "ring"])
+    ap.add_argument("--profile-dir", default=None,
+                    help="calibrated cost-profile store (default: "
+                         "tune/profiles or $REPRO_PROFILE_DIR)")
     args = ap.parse_args()
 
     assert jax.device_count() == 512, (
@@ -294,6 +307,7 @@ def main():
                 cells.append(run_cell(
                     arch, shape, multi_pod, strategy=args.strategy,
                     probes=not args.no_probes,
+                    profile_dir=args.profile_dir,
                     **(({"remat": False} if args.no_remat else {})
                        | ({"remat_policy": args.remat_policy}
                           if args.remat_policy != "nothing" else {})

@@ -13,26 +13,90 @@ from __future__ import annotations
 
 import jax
 
-from repro.core.scan_api import CostModel
+from repro.core.scan_api import CostModel, CostProfile
 
-# α-β-γ parameters per interconnect tier (see DESIGN.md §7): "pod"
-# collectives traverse DCI (higher launch latency, lower bandwidth)
-# while intra-pod axes ride ICI.
+# Hand-guessed default α-β-γ parameters per interconnect tier (see
+# DESIGN.md §7): "pod" collectives traverse DCI (higher launch latency,
+# lower bandwidth) while intra-pod axes ride ICI.  These are the
+# ``source="default"`` fallback — ``resolve_profile`` prefers a
+# calibrated profile measured on the actual mesh (core/tune.py).
 ICI_COST = CostModel(alpha=1e-6, beta=1.0 / 50e9, gamma=2.0 / 819e9)
 DCI_COST = CostModel(alpha=10e-6, beta=1.0 / 12.5e9, gamma=2.0 / 819e9)
 
+DEFAULT_PROFILE = CostProfile(
+    tiers=(("dci", DCI_COST), ("ici", ICI_COST)),
+    source="default", axis_tiers=(("pod", "dci"),),
+    default_tier="ici")
+
+_active_profile: CostProfile | None = None
+
+
+def install_profile(profile: CostProfile | None) -> CostProfile | None:
+    """Install ``profile`` as the pricing source ``axis_cost_model``
+    resolves (None restores the defaults).  Returns the previously
+    installed profile.  Because the plan cache keys on resolved
+    pricing constants, installing a recalibrated profile invalidates
+    every stale plan without an explicit cache flush."""
+    global _active_profile
+    prev = _active_profile
+    _active_profile = profile
+    return prev
+
+
+def current_profile() -> CostProfile:
+    """The installed (calibrated) profile, or the default one."""
+    return _active_profile or DEFAULT_PROFILE
+
 
 def axis_cost_model(axis_name) -> CostModel:
-    """Per-axis cost tier: DCI for the cross-pod axis, ICI otherwise.
+    """Per-axis pricing kernel: the cross-pod axis rides the "dci"
+    tier, everything else "ici" — resolved from the *installed*
+    profile (calibrated when one is installed, hand-guessed defaults
+    otherwise).
 
     A stable module-level function, so it can be installed as the
     ambient planner cost model (``scan_api.use_cost_model(
     axis_cost_model)`` — train.py and dryrun.py do) and multi-axis
     plans price each sub-axis by its own interconnect.
     """
-    axes = (axis_name,) if isinstance(axis_name, str) else \
-        tuple(axis_name or ())
-    return DCI_COST if "pod" in axes else ICI_COST
+    return current_profile().for_axis(axis_name)
+
+
+def mesh_fingerprint(mesh) -> str:
+    """Identity of a mesh for the calibrated-profile store: platform,
+    device kind and the axis-name/size grid."""
+    dev = mesh.devices.flat[0]
+    kind = getattr(dev, "device_kind", "unknown")
+    grid = "x".join(f"{a}{mesh.shape[a]}" for a in mesh.axis_names)
+    return f"{getattr(dev, 'platform', 'unknown')}-{kind}-{grid}"
+
+
+def resolve_profile(mesh=None, directory: str | None = None,
+                    fingerprint: str | None = None) -> CostProfile:
+    """The best available profile for ``mesh``: a calibrated profile
+    persisted under the mesh's fingerprint, else one from the
+    device-free simulated calibration flow (``python -m
+    repro.core.tune --simulate``), else :data:`DEFAULT_PROFILE`."""
+    from repro.core import tune  # lazy: tune lazily imports this module
+
+    fp = fingerprint or (mesh_fingerprint(mesh) if mesh is not None
+                         else None)
+    if fp is not None:
+        prof = tune.load_profile(fp, directory)
+        if prof is not None:
+            return prof
+    prof = tune.load_profile("simulated-default", directory)
+    return prof if prof is not None else DEFAULT_PROFILE
+
+
+def use_calibrated_profile(mesh=None,
+                           directory: str | None = None) -> CostProfile:
+    """Resolve and install the calibrated profile for ``mesh`` (falls
+    back to defaults); returns the installed profile so callers can
+    log its provenance."""
+    prof = resolve_profile(mesh, directory)
+    install_profile(prof if prof is not DEFAULT_PROFILE else None)
+    return prof
 
 
 def make_production_mesh(*, multi_pod: bool = False):

@@ -74,6 +74,10 @@ def train(argv=None):
     ap.add_argument("--exscan", default="auto",
                     choices=["auto", "123", "1doubling", "two_op",
                              "native", "ring"])
+    ap.add_argument("--profile-dir", default=None,
+                    help="calibrated cost-profile store (default: "
+                         "tune/profiles or $REPRO_PROFILE_DIR; see "
+                         "python -m repro.core.tune)")
     ap.add_argument("--log-every", type=int, default=10)
     args = ap.parse_args(argv)
 
@@ -81,6 +85,16 @@ def train(argv=None):
     cfg = get(args.arch, scan=ScanSpec(kind="exclusive",
                                        algorithm=args.exscan))
     mesh = mesh_lib.make_host_mesh(args.data_mesh, args.model_mesh)
+    # planner pricing provenance: prefer a profile calibrated on this
+    # mesh (core/tune.py) over the hand-guessed defaults, and say which
+    profile = mesh_lib.use_calibrated_profile(
+        mesh, directory=args.profile_dir)
+    prov = profile.provenance(mesh_lib.mesh_fingerprint(mesh))
+    print(f"[planner] cost profile: {prov['source']} "
+          f"fingerprint={prov['fingerprint']} "
+          f"mesh={prov['mesh_fingerprint']}"
+          + (f" fit_residuals={prov['fit_residuals']}"
+             if prov["fit_residuals"] else ""))
     model = Model(cfg, mesh)
 
     params = model.init_params(jax.random.PRNGKey(0))

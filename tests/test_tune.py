@@ -1,0 +1,439 @@
+"""Cost-model calibration tests (core/tune.py + the profile plumbing).
+
+Covers the ISSUE-4 acceptance criteria: the simulated-clock
+microbenchmark + NNLS fit recovers a known α/β/γ within 5% for p in
+2..17; calibration produces a persisted, schema-versioned
+:class:`CostProfile` whose installation flips ``ScanPlan
+.cost_model_source`` to "calibrated"; an inflated-β profile flips
+"auto" to the segmented ring at a smaller m than the defaults; the
+plan cache keys on *resolved* pricing constants (per-call closures hit,
+recalibration invalidates); ``use_cost_model`` nests re-entrantly; and
+``ScanPlan.explain()`` lists every candidate algorithm's predicted
+cost.
+"""
+
+import json
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from helpers import REPO, SRC
+
+from repro.core import scan_api, tune
+from repro.core.scan_api import (
+    PROFILE_SCHEMA_VERSION, CostModel, CostProfile, ScanSpec, plan,
+    plan_cache_clear, use_cost_model)
+from repro.launch import mesh as mesh_lib
+
+
+def _profile(alpha=2e-6, beta=4e-11, gamma=5e-12, source="calibrated",
+             tier="ici", **kw):
+    return CostProfile(
+        tiers=((tier, CostModel(alpha=alpha, beta=beta, gamma=gamma,
+                                source=source)),),
+        source=source, default_tier=tier, **kw)
+
+
+# ---------------------------------------------------------------------------
+# NNLS
+# ---------------------------------------------------------------------------
+
+
+def test_nnls_matches_unconstrained_when_solution_nonnegative():
+    rng = np.random.default_rng(0)
+    A = rng.standard_normal((40, 3))
+    x_true = np.array([0.5, 2.0, 0.1])
+    b = A @ x_true
+    np.testing.assert_allclose(tune.nnls(A, b), x_true, rtol=1e-8)
+
+
+def test_nnls_clamps_negative_coordinates():
+    # b = A @ [1, -1]: the best nonnegative fit zeroes the second coord
+    A = np.array([[1.0, 0.0], [0.0, 1.0], [1.0, 1.0]])
+    b = A @ np.array([1.0, -1.0])
+    x = tune.nnls(A, b)
+    assert (x >= 0).all()
+    assert x[1] == 0.0
+    # and is no worse than any other nonnegative candidate
+    assert np.linalg.norm(A @ x - b) <= \
+        np.linalg.norm(A @ np.array([0.5, 0.0]) - b) + 1e-12
+
+
+# ---------------------------------------------------------------------------
+# Fit recovery: data generated from known constants comes back (< 5%)
+# ---------------------------------------------------------------------------
+
+
+def test_fit_recovers_known_constants_p2_to_17():
+    truth = CostModel(alpha=3.7e-6, beta=1.0 / 31e9, gamma=4.4e-12)
+    samples = tune.calibration_sweep(
+        "ici", truth, ps=tuple(range(2, 18)), ms=(512, 8192, 131_072),
+        clock="simulated")
+    fitted, resid = tune.fit_tier(samples)
+    assert fitted.source == "calibrated"
+    assert fitted.alpha == pytest.approx(truth.alpha, rel=0.05)
+    assert fitted.beta == pytest.approx(truth.beta, rel=0.05)
+    assert fitted.gamma == pytest.approx(truth.gamma, rel=0.05)
+    assert resid < 0.05
+
+
+def test_fit_profile_carries_provenance_and_residuals():
+    truth = mesh_lib.DEFAULT_PROFILE
+    prof = tune.calibrate(simulate=True, truth=truth,
+                          ps=(2, 3, 4, 8), ms=(512, 8192),
+                          mesh_fingerprint="test-mesh")
+    assert prof.source == "calibrated"
+    assert prof.mesh_fingerprint == "test-mesh"
+    assert prof.axis_tiers == truth.axis_tiers
+    residuals = dict(prof.residuals)
+    assert set(residuals) == {name for name, _ in truth.tiers}
+    assert all(r < 0.05 for r in residuals.values())
+    for tier, want in truth.tiers:
+        got = prof.model(tier)
+        assert got.alpha == pytest.approx(want.alpha, rel=0.05)
+        assert got.beta == pytest.approx(want.beta, rel=0.05)
+        assert got.gamma == pytest.approx(want.gamma, rel=0.05)
+
+
+def test_schedule_features_match_plan_pricing():
+    # the fit's design matrix must mirror the planner's conventions,
+    # or the fitted constants would price plans inconsistently
+    for name, p, m, S in (("123", 9, 4096, 1), ("ring", 9, 4096, 8),
+                          ("native", 9, 4096, 1)):
+        pl = plan(ScanSpec(kind="exclusive", algorithm=name,
+                           segments=S if name == "ring" else None),
+                  p=p, nbytes=m)
+        hops, wire, op_bytes = tune.schedule_features(
+            pl.schedule(), m)
+        cm = pl.cost_model
+        assert cm.cost(hops=int(hops), serial_bytes=wire,
+                       ops=pl.op_applications,
+                       payload_bytes=-(-m // pl.segments)) == \
+            pytest.approx(pl.cost)
+        assert wire == pl.bytes_on_wire
+
+
+# ---------------------------------------------------------------------------
+# Decision boundaries under calibrated profiles
+# ---------------------------------------------------------------------------
+
+
+def _flip_m(cm, p=36, lo=64, hi=64 << 20):
+    spec = ScanSpec(algorithm="auto")
+    if plan(spec, p=p, nbytes=lo, cost_model=cm).algorithm != "123":
+        return lo
+    while lo + 1 < hi:
+        mid = (lo + hi) // 2
+        if plan(spec, p=p, nbytes=mid, cost_model=cm).algorithm == "123":
+            lo = mid
+        else:
+            hi = mid
+    return hi
+
+
+def test_inflated_beta_flips_auto_to_ring_at_smaller_m():
+    default = mesh_lib.DEFAULT_PROFILE.model("ici")
+    inflated = CostProfile(
+        tiers=(("ici", CostModel(alpha=default.alpha,
+                                 beta=default.beta * 100,
+                                 gamma=default.gamma,
+                                 source="calibrated")),),
+        source="calibrated", default_tier="ici")
+    m_default = _flip_m(default)
+    m_inflated = _flip_m(inflated)
+    assert m_inflated < m_default
+    pl = plan(ScanSpec(algorithm="auto"), p=36, nbytes=m_inflated,
+              cost_model=inflated)
+    assert pl.algorithm == "ring" and pl.cost_model_source == "calibrated"
+
+
+def test_calibrated_profile_keeps_small_m_on_123():
+    # the --check gate's invariant, asserted directly on a fitted
+    # profile: calibration from the default machine must not flip the
+    # paper's small-m decision
+    prof = tune.calibrate(simulate=True, ps=(2, 3, 4, 8, 9, 16, 17),
+                          ms=(512, 8192, 131_072))
+    for m in (8, 64):
+        pl = plan(ScanSpec(algorithm="auto"), p=36, nbytes=m,
+                  cost_model=prof.model("ici"))
+        assert pl.algorithm == "123", (m, pl.algorithm)
+
+
+# ---------------------------------------------------------------------------
+# Persistence: JSON store keyed by mesh fingerprint, schema-versioned
+# ---------------------------------------------------------------------------
+
+
+def test_profile_json_roundtrip(tmp_path):
+    prof = _profile(mesh_fingerprint="cpu-test-data4",
+                    axis_tiers=(("pod", "ici"),),
+                    residuals=(("ici", 1.5e-9),))
+    path = tune.save_profile(prof, str(tmp_path))
+    assert path.endswith("profile_cpu-test-data4.json")
+    loaded = tune.load_profile("cpu-test-data4", str(tmp_path))
+    assert loaded == prof
+    assert loaded.fingerprint() == prof.fingerprint()
+    # unknown fingerprint -> None (fallback to defaults)
+    assert tune.load_profile("other-mesh", str(tmp_path)) is None
+    # latest_profile finds it by mtime
+    assert tune.latest_profile(str(tmp_path)) == prof
+
+
+def test_profile_schema_version_gate(tmp_path):
+    prof = _profile(mesh_fingerprint="m")
+    path = tune.save_profile(prof, str(tmp_path))
+    obj = json.load(open(path))
+    obj["schema_version"] = PROFILE_SCHEMA_VERSION + 1
+    with open(path, "w") as f:
+        json.dump(obj, f)
+    with pytest.raises(ValueError):
+        CostProfile.from_json(obj)
+    # the store treats an incompatible schema as absent, not fatal
+    assert tune.load_profile("m", str(tmp_path)) is None
+
+
+def test_resolve_profile_prefers_calibrated_then_defaults(tmp_path):
+    assert mesh_lib.resolve_profile(
+        fingerprint="nope", directory=str(tmp_path)) is \
+        mesh_lib.DEFAULT_PROFILE
+    sim = _profile(mesh_fingerprint="simulated-default")
+    tune.save_profile(sim, str(tmp_path))
+    # device-free calibration is the fallback for any mesh fingerprint
+    assert mesh_lib.resolve_profile(
+        fingerprint="nope", directory=str(tmp_path)) == sim
+    exact = _profile(alpha=9e-6, mesh_fingerprint="nope")
+    tune.save_profile(exact, str(tmp_path))
+    assert mesh_lib.resolve_profile(
+        fingerprint="nope", directory=str(tmp_path)) == exact
+
+
+def test_install_profile_routes_axis_cost_model():
+    prof = _profile(tier="ici", axis_tiers=(("pod", "ici"),))
+    prev = mesh_lib.install_profile(prof)
+    try:
+        assert mesh_lib.axis_cost_model("data") == prof.model("ici")
+        assert mesh_lib.axis_cost_model("data").source == "calibrated"
+        with scan_api.use_cost_model(mesh_lib.axis_cost_model):
+            pl = plan(ScanSpec(algorithm="auto"), p=16, nbytes=64)
+        assert pl.cost_model_source == "calibrated"
+    finally:
+        mesh_lib.install_profile(prev)
+    assert mesh_lib.axis_cost_model("data") is mesh_lib.ICI_COST
+    assert mesh_lib.axis_cost_model(("pod", "data")) is mesh_lib.DCI_COST
+
+
+# ---------------------------------------------------------------------------
+# Plan-cache keying on resolved pricing constants (satellite regression)
+# ---------------------------------------------------------------------------
+
+
+def test_plan_cache_keyed_by_resolved_constants_not_callable_identity():
+    plan_cache_clear()
+    spec = ScanSpec(algorithm="auto")
+    a = plan(spec, p=16, nbytes=128,
+             cost_model=lambda axis: CostModel())
+    b = plan(spec, p=16, nbytes=128,
+             cost_model=lambda axis: CostModel())
+    assert a is b  # distinct closures, same constants: cache HIT
+    info = scan_api.plan_cache_info()
+    assert info["hits"] >= 1
+
+
+def test_plan_cache_invalidated_by_recalibrated_profile():
+    plan_cache_clear()
+    spec = ScanSpec(algorithm="auto")
+    prev = mesh_lib.install_profile(None)
+    try:
+        a = plan(spec, p=16, nbytes=128,
+                 cost_model=mesh_lib.axis_cost_model)
+        # recalibration installs new constants behind the SAME callable:
+        # stale plans must not be served
+        mesh_lib.install_profile(_profile(alpha=123e-6))
+        b = plan(spec, p=16, nbytes=128,
+                 cost_model=mesh_lib.axis_cost_model)
+        assert b is not a
+        assert b.cost_model_source == "calibrated"
+        assert a.cost_model_source == "default"
+    finally:
+        mesh_lib.install_profile(prev)
+
+
+def test_plan_accepts_profile_directly():
+    prof = _profile()
+    pl = plan(ScanSpec(algorithm="auto"), p=8, nbytes=64,
+              cost_model=prof)
+    assert pl.cost_model == prof.model("ici")
+    with use_cost_model(prof):
+        pl2 = plan(ScanSpec(algorithm="auto"), p=8, nbytes=64)
+    assert pl2 is pl
+
+
+# ---------------------------------------------------------------------------
+# use_cost_model re-entrancy (satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_use_cost_model_nests_reentrantly():
+    outer = CostModel(alpha=1e-5)
+    inner = CostModel(alpha=2e-5)
+    assert scan_api.current_cost_model() is scan_api.DEFAULT_COST_MODEL
+    with use_cost_model(outer):
+        assert scan_api.current_cost_model() is outer
+        with use_cost_model(inner):
+            assert scan_api.current_cost_model() is inner
+            with use_cost_model(outer):
+                assert scan_api.current_cost_model() is outer
+            assert scan_api.current_cost_model() is inner
+        assert scan_api.current_cost_model() is outer
+    assert scan_api.current_cost_model() is scan_api.DEFAULT_COST_MODEL
+
+
+def test_use_cost_model_none_means_defaults():
+    # PR-1 semantics: installing None plans under the defaults rather
+    # than poisoning resolution with a NoneType
+    with use_cost_model(CostModel(alpha=9e-5)):
+        with use_cost_model(None):
+            assert scan_api.current_cost_model() is \
+                scan_api.DEFAULT_COST_MODEL
+            pl = plan(ScanSpec(algorithm="auto"), p=8, nbytes=64)
+            assert pl.cost_model == scan_api.DEFAULT_COST_MODEL
+
+
+def test_tier_for_axis_tuple_routes_to_slowest_member():
+    prof = CostProfile(
+        tiers=(("dci", CostModel(alpha=1e-5)),
+               ("ici", CostModel(alpha=1e-6))),
+        axis_tiers=(("data", "ici"), ("pod", "dci")),
+        default_tier="ici")
+    # tuple order must not matter: "pod" anywhere means DCI
+    assert prof.tier_for_axis(("data", "pod")) == "dci"
+    assert prof.tier_for_axis(("pod", "data")) == "dci"
+    assert prof.for_axis(("data", "pod")) == prof.model("dci")
+    assert prof.tier_for_axis(("data",)) == "ici"
+    assert prof.tier_for_axis("unlisted") == "ici"
+    assert mesh_lib.DEFAULT_PROFILE.for_axis(("data", "pod")) is \
+        mesh_lib.DCI_COST
+
+
+def test_use_cost_model_restores_on_exception():
+    cm = CostModel(alpha=1e-5)
+    with pytest.raises(RuntimeError):
+        with use_cost_model(cm):
+            raise RuntimeError("boom")
+    assert scan_api.current_cost_model() is scan_api.DEFAULT_COST_MODEL
+
+
+# ---------------------------------------------------------------------------
+# ScanPlan.explain(): the runner-up table
+# ---------------------------------------------------------------------------
+
+
+def test_explain_lists_every_candidate_with_costs():
+    pl = plan(ScanSpec(algorithm="auto"), p=36, nbytes=8)
+    rows = pl.explain()
+    names = {r["algorithm"] for r in rows}
+    assert names == set(scan_api.algorithms("exclusive"))
+    chosen = [r for r in rows if r["chosen"]]
+    assert len(chosen) == 1 and chosen[0]["algorithm"] == pl.algorithm
+    assert rows[0]["chosen"]  # cheapest first: auto picked the min
+    assert chosen[0]["cost"] == pytest.approx(pl.cost)
+    for r in rows:
+        assert r["cost"] == pytest.approx(
+            r["cost_alpha"] + r["cost_beta"] + r["cost_gamma"])
+        assert r["why"]
+    # losers say why: the dominant excess component is named
+    losers = [r for r in rows if not r["chosen"]]
+    assert losers and all("dominated by" in r["why"] for r in losers)
+
+
+def test_explain_pinned_spec_reports_auto_preference():
+    pl = plan(ScanSpec(algorithm="ring"), p=36, nbytes=8)
+    row = next(r for r in pl.explain() if r["chosen"])
+    assert "pinned by spec" in row["why"]
+    assert "auto would pick" in row["why"]
+
+
+def test_explain_pinned_spec_marks_cheaper_candidates_cheaper():
+    # candidates the pin kept from winning must read as cheaper, with
+    # the leading (most negative) component named — not a garbled
+    # "+-Nus ... dominated by" line
+    pl = plan(ScanSpec(algorithm="ring"), p=64, nbytes=8)
+    rows = pl.explain()
+    cheaper = [r for r in rows if r["cost"] < pl.cost]
+    assert cheaper
+    for r in cheaper:
+        assert "cheaper than pinned ring" in r["why"]
+        assert "+-" not in r["why"]
+    assert all("+-" not in r["why"] for r in rows)
+
+
+def test_explain_composite_tags_axes():
+    pl = plan(ScanSpec(algorithm="auto", axis_name=("pod", "data")),
+              p=(2, 8), nbytes=64)
+    rows = pl.explain()
+    assert {r["axis"] for r in rows} == {"pod", "data"}
+    # every sub-plan contributes a full candidate table
+    assert sum(1 for r in rows if r["chosen"]) == len(pl.sub_plans)
+
+
+# ---------------------------------------------------------------------------
+# Walltime clock (SPMD executor on devices — fake CPU devices suffice)
+# ---------------------------------------------------------------------------
+
+
+_WALLTIME = """
+from repro.core import scan_api, tune
+
+sched = scan_api.get_algorithm("exclusive", "123").schedule(4)
+t = tune.measure_schedule_walltime(sched, 512, repeats=2)
+assert t > 0.0, t
+prof = tune.calibrate(simulate=False, ps=(4,), ms=(512, 8192),
+                      mesh_fingerprint="walltime-test")
+assert prof.source == "calibrated"
+assert prof.mesh_fingerprint == "walltime-test"
+assert all(cm.source == "calibrated" for _, cm in prof.tiers)
+assert all(cm.alpha >= 0 and cm.beta >= 0 and cm.gamma >= 0
+           for _, cm in prof.tiers)
+print("OK walltime", f"{t:.2e}")
+"""
+
+
+def test_walltime_clock_on_fake_devices():
+    from helpers import run_with_devices
+
+    out = run_with_devices(_WALLTIME, 4, x64=False)
+    assert "OK walltime" in out
+
+
+def test_walltime_refuses_without_enough_devices():
+    sched = scan_api.get_algorithm("exclusive", "123").schedule(64)
+    with pytest.raises(RuntimeError, match="--simulate"):
+        tune.measure_schedule_walltime(sched, 512)
+
+
+# ---------------------------------------------------------------------------
+# CLI: the acceptance-criterion one-command flow
+# ---------------------------------------------------------------------------
+
+
+def test_cli_simulate_persists_profile_and_reports_residual(tmp_path):
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.core.tune", "--simulate",
+         "--out", str(tmp_path), "--ps", "2,3,4,8,9",
+         "--ms", "512,8192"],
+        capture_output=True, text=True, timeout=600,
+        env={**__import__("os").environ,
+             "PYTHONPATH": SRC, "JAX_PLATFORMS": "cpu"},
+        cwd=REPO)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "residual=" in proc.stdout
+    prof = tune.load_profile("simulated-default", str(tmp_path))
+    assert prof is not None and prof.source == "calibrated"
+    # plans priced through the persisted profile carry the provenance
+    pl = plan(ScanSpec(algorithm="auto"), p=36, nbytes=8,
+              cost_model=prof)
+    assert pl.cost_model_source == "calibrated"
+    assert {r["algorithm"] for r in pl.explain()} == \
+        set(scan_api.algorithms("exclusive"))
