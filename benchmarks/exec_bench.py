@@ -1,0 +1,212 @@
+"""Execution-engine benchmark: trace size, compile time, walltime.
+
+The compiled-round-table claim (DESIGN §7) made measurable: for each
+registered exclusive algorithm at p ∈ {8, 64, 256} this emits
+
+  * ``trace_eqns``   — jaxpr equation count of the traced SPMD program
+    (including nested sub-jaxprs, so a rolled ``lax.scan`` body counts
+    once and an unrolled ring pays per round) and the trace seconds;
+  * ``compile_seconds`` — XLA compile time of the jitted ``shard_map``
+    program (the p=256 *unrolled* ring is tens of seconds — the
+    reason the round-table executor exists — so that cell is opt-in
+    via ``--full``);
+  * ``simulated_seconds`` — the deterministic simulated clock of
+    :func:`repro.core.tune.measure_schedule_simulated` under the
+    default ICI pricing (device-free walltime proxy, reproducible in
+    CI).
+
+The segmented ring is measured in BOTH executor modes (``rolled``:
+the single-``lax.scan`` round table; ``unrolled``: one trace site per
+round), so the win is a ratio in the same JSON, not a claim.
+
+``--check`` is the CI trace-size budget gate: the p=256 ring's rolled
+trace must stay under ``TRACE_EQ_BUDGET`` equations and beat the
+unrolled trace by at least ``MIN_ROLLED_WIN``× (the acceptance floor
+is 5×; measured is >100×).
+
+Each p needs its own fake-device count, which jax fixes at first
+initialization — so the parent process spawns one worker subprocess
+per p (``--worker``) and aggregates their rows into
+``BENCH_exec.json``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+DEFAULT_JSON = "BENCH_exec.json"
+PS = (8, 64, 256)
+ALGS = ("123", "1doubling", "two_op", "native", "ring")
+PAYLOAD_ELEMS = 256  # int64 -> 2 KiB per rank
+TRACE_EQ_BUDGET = 256  # p=256 rolled-ring trace ceiling (measured: ~92)
+MIN_ROLLED_WIN = 5.0  # acceptance floor for unrolled/rolled eq ratio
+# compile timing runs everywhere EXCEPT the p=256 unrolled ring
+# (~30 s of XLA time proving the point; enable with --full)
+SLOW_COMPILE_P = 256
+
+MARK = "BENCH_EXEC_ROWS "
+
+
+def worker(p: int, full: bool) -> list[dict]:
+    import numpy as np
+
+    import jax
+    from jax import shard_map
+    from jax.sharding import Mesh
+    from jax.sharding import PartitionSpec as P_
+
+    from repro.core import monoid as monoid_lib
+    from repro.core import schedule as schedule_lib
+    from repro.core import tune
+    from repro.core.scan_api import ScanSpec, plan
+    from repro.launch import mesh as mesh_lib
+
+    assert len(jax.devices()) >= p, (len(jax.devices()), p)
+    m = monoid_lib.ADD
+    x = np.arange(p * PAYLOAD_ELEMS, dtype=np.int64).reshape(
+        p, PAYLOAD_ELEMS)
+    nbytes = x[0].nbytes
+    mesh = Mesh(np.array(jax.devices()[:p]).reshape(p), ("x",))
+    truth = mesh_lib.DEFAULT_PROFILE.model("ici")
+    rows = []
+    for alg in ALGS:
+        pl = plan(ScanSpec(kind="exclusive", algorithm=alg), p=p,
+                  nbytes=nbytes)
+        sched = pl.schedule()
+        sim_seconds, _ = tune.measure_schedule_simulated(
+            sched, nbytes, truth)
+        modes = (("rolled", False), ("unrolled", True)) \
+            if alg == "ring" else (("rolled", False),)
+        for mode, unrolled in modes:
+            ex = schedule_lib.SPMDExecutor("x", unrolled=unrolled)
+            fn = shard_map(lambda v: ex.execute(sched, v, m),
+                           mesh=mesh, in_specs=P_("x"),
+                           out_specs=P_("x"))
+            t0 = time.perf_counter()
+            eqs = schedule_lib.jaxpr_eqn_count(jax.make_jaxpr(fn)(x))
+            trace_s = time.perf_counter() - t0
+            row = {
+                "p": p, "algorithm": alg, "mode": mode,
+                "segments": pl.segments, "rounds": pl.rounds,
+                "payload_bytes": nbytes, "trace_eqns": eqs,
+                "trace_seconds": trace_s,
+                "simulated_seconds": sim_seconds,
+            }
+            if full or not (unrolled and p >= SLOW_COMPILE_P):
+                t0 = time.perf_counter()
+                jax.jit(fn).lower(x).compile()
+                row["compile_seconds"] = time.perf_counter() - t0
+            rows.append(row)
+    return rows
+
+
+_SRC = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src")
+
+
+def _spawn_worker(p: int, full: bool) -> list[dict]:
+    if _SRC not in sys.path:
+        sys.path.insert(0, _SRC)
+    from repro.launch.mesh import fake_device_env
+
+    env = fake_device_env(p)
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    env["PYTHONPATH"] = _SRC + os.pathsep + env.get("PYTHONPATH", "")
+    cmd = [sys.executable, os.path.abspath(__file__), "--worker",
+           str(p)]
+    if full:
+        cmd.append("--full")
+    proc = subprocess.run(cmd, env=env, capture_output=True, text=True)
+    if proc.returncode != 0:
+        raise SystemExit(
+            f"exec_bench worker p={p} failed (rc={proc.returncode})\n"
+            f"{proc.stdout}\n{proc.stderr}")
+    for line in proc.stdout.splitlines():
+        if line.startswith(MARK):
+            return json.loads(line[len(MARK):])
+    raise SystemExit(f"worker p={p} emitted no rows:\n{proc.stdout}")
+
+
+def check(rows: list[dict]) -> list[str]:
+    """The trace-size budget gate (CI): p=256 rolled ring under the
+    fixed equation ceiling AND >= MIN_ROLLED_WIN x smaller than the
+    unrolled trace of the same schedule."""
+    failures = []
+    by = {(r["p"], r["algorithm"], r["mode"]): r for r in rows}
+    rolled = by.get((256, "ring", "rolled"))
+    unrolled = by.get((256, "ring", "unrolled"))
+    if rolled is None or unrolled is None:
+        return [f"missing p=256 ring rows (have {sorted(by)})"]
+    if rolled["trace_eqns"] > TRACE_EQ_BUDGET:
+        failures.append(
+            f"p=256 rolled ring trace {rolled['trace_eqns']} eqns "
+            f"exceeds budget {TRACE_EQ_BUDGET}")
+    ratio = unrolled["trace_eqns"] / max(rolled["trace_eqns"], 1)
+    if ratio < MIN_ROLLED_WIN:
+        failures.append(
+            f"rolled trace win {ratio:.1f}x below the "
+            f"{MIN_ROLLED_WIN}x floor "
+            f"({unrolled['trace_eqns']} -> {rolled['trace_eqns']})")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="Trace-size / compile-time / simulated-walltime "
+                    "benchmark of the schedule executors.")
+    ap.add_argument("--worker", type=int, default=None,
+                    help="internal: run one device-count cell")
+    ap.add_argument("--ps", type=lambda s: tuple(
+        int(t) for t in s.split(",") if t), default=PS,
+        help="comma-separated rank counts (default 8,64,256)")
+    ap.add_argument("--full", action="store_true",
+                    help="also compile the p=256 unrolled ring "
+                         "(tens of seconds of XLA time)")
+    ap.add_argument("--check", action="store_true",
+                    help="fail unless the p=256 rolled-ring trace is "
+                         "under the equation budget and >=5x smaller "
+                         "than unrolled (CI gate)")
+    ap.add_argument("--json", nargs="?", const=DEFAULT_JSON,
+                    default=None, metavar="PATH",
+                    help=f"write rows as JSON (default {DEFAULT_JSON})")
+    args = ap.parse_args(argv)
+
+    if args.worker is not None:
+        rows = worker(args.worker, args.full)
+        print(MARK + json.dumps(rows))
+        return 0
+
+    rows = []
+    for p in args.ps:
+        rows.extend(_spawn_worker(p, args.full))
+    for r in rows:
+        key = f"exec/{r['algorithm']}/{r['mode']}/p{r['p']}"
+        print(f"{key}/trace_eqns,{r['trace_eqns']},jaxpr_equations")
+        print(f"{key}/trace_s,{r['trace_seconds']:.3f},seconds")
+        if "compile_seconds" in r:
+            print(f"{key}/compile_s,{r['compile_seconds']:.3f},"
+                  f"seconds")
+        print(f"{key}/simulated_us,{r['simulated_seconds'] * 1e6:.2f},"
+              f"default_ici_clock")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"schema_version": 1, "benchmark": "exec_bench",
+                       "trace_eq_budget": TRACE_EQ_BUDGET,
+                       "rows": rows}, f, indent=1, sort_keys=True)
+        print(f"wrote {args.json}")
+    if args.check:
+        failures = check(rows)
+        if failures:
+            raise SystemExit("trace-budget gate failed: "
+                             + "; ".join(failures))
+        print("trace-budget gate OK")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

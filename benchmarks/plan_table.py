@@ -140,6 +140,12 @@ def run(csv_rows: list, check: bool = False, profile=None):
                 csv_rows.append((key + "/rounds_measured",
                                  res["rounds_measured"],
                                  "simulator_executor"))
+                # monoid-aware ⊕ prediction (the add monoid elides the
+                # redundant combine order in exchange/scan_reduce
+                # rounds); verify_plan above drift-checks it against
+                # the simulator-executed count
+                csv_rows.append((key + "/ops", pl.op_applications,
+                                 "oplus_commutative_elided"))
                 csv_rows.append((key + "/cost_us", pl.cost * 1e6,
                                  f"us_{pl.cost_model_source}_abg"))
                 csv_rows.append((key + "/cost_modeled_us",

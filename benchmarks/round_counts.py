@@ -4,7 +4,11 @@ plus the pipelined segmented ring's p−2+S rounds measured by executing
 its schedule IR in the numpy simulator executor against the plan's
 prediction, plus the fused-scan round law — k concurrent small scans
 packed into one payload ride the SINGLE-scan round count, not k× —
-(``--check`` turns any drift into a build failure)."""
+plus the commutativity-elision ⊕ law: butterfly exchange rounds cost
+one ⊕ instead of two and fused scan_total (scan_reduce) rounds two
+instead of three for commutative monoids, consistently across the
+IR's ``op_count``, the plan's prediction and the simulator-executed
+measurement (``--check`` turns any drift into a build failure)."""
 
 from __future__ import annotations
 
@@ -22,6 +26,7 @@ RING_PS = (4, 8, 16, 36, 64)  # simulator-executed, keep p moderate
 RING_SS = (1, 4, 16)
 FUSED_PS = (8, 36, 64, 256)  # fused k-scan round-law rows
 FUSED_K = 4
+ELISION_PS = (4, 8, 16, 32)  # commutative ⊕-elision rows (pow-2 p)
 
 
 def run(csv_rows: list, check: bool = False):
@@ -62,6 +67,43 @@ def run(csv_rows: list, check: bool = False):
             res = fp.verify()
             if not res["ok"]:
                 drift.append((key, res))
+    # commutativity-elided ⊕ counts: for commutative monoids the
+    # butterfly exchange computes ONE combine order (2->1 ⊕/round) and
+    # the fused scan_total butterfly folds the window total once
+    # (3->2 ⊕/round); the IR's op_count, the plan's prediction and the
+    # simulator-executed measurement must all agree (affine rows keep
+    # the non-commutative counts as the baseline)
+    for p in ELISION_PS:
+        cells = (("butterfly", "allreduce", "add", "affine"),
+                 ("fused_doubling", "scan_total", "add", "affine"))
+        for alg, kind, comm_m, noncomm_m in cells:
+            for mono in (comm_m, noncomm_m):
+                pl = plan(ScanSpec(kind=kind, algorithm=alg,
+                                   monoid=mono), p=p, nbytes=64)
+                key = f"ops/{alg}/{mono}/p{p}"
+                csv_rows.append((key, pl.op_applications,
+                                 "oplus_predicted"))
+                sched = pl.schedule()
+                commutative = mono == comm_m
+                if pl.op_applications != sched.op_count(commutative):
+                    drift.append((key, {
+                        "plan": pl.op_applications,
+                        "ir": sched.op_count(commutative)}))
+                res = schedule_lib.verify_plan(pl)
+                csv_rows.append((key + "_measured",
+                                 res["ops_measured"],
+                                 "simulator_executor"))
+                if not res["ok"]:
+                    drift.append((key, res))
+            comm = plan(ScanSpec(kind=kind, algorithm=alg,
+                                 monoid=comm_m), p=p, nbytes=64)
+            noncomm = plan(ScanSpec(kind=kind, algorithm=alg,
+                                    monoid=noncomm_m), p=p, nbytes=64)
+            if comm.op_applications >= noncomm.op_applications:
+                drift.append((f"ops/{alg}/p{p}", {
+                    "commutative": comm.op_applications,
+                    "noncommutative": noncomm.op_applications,
+                    "expected": "commutative strictly fewer"}))
     if check and drift:
         raise SystemExit(
             f"plan/measurement drift in {len(drift)} cells: {drift}")

@@ -179,15 +179,27 @@ rounds_1doubling = oracle.rounds_1doubling
 rounds_two_op = oracle.rounds_two_op
 
 
-def expected_rounds(algorithm: str, p: int) -> int:
-    """ppermute rounds of an exclusive algorithm (at S=1), from the
-    registered schedule.
+def expected_rounds(algorithm: str, p: int, *,
+                    kind: str = "exclusive", segments: int = 1) -> int:
+    """ppermute rounds of a registered algorithm, derived from its
+    schedule builder — NOT a hand-maintained table, so it can never
+    disagree with the IR the executors run (a drift test pins it to
+    the closed-form oracle counts as well).
 
-    Legacy exception: ``"native"`` reports 1 (its single all-gather)
-    rather than the schedule's 0 ppermutes, preserving the historical
-    convention of this helper.
+    Legacy exception: exclusive ``"native"`` reports 1 (its single
+    all-gather) rather than the schedule's 0 ppermutes, preserving the
+    historical convention of this helper.
     """
-    if algorithm == "native":
+    if kind == "exclusive" and algorithm == "native":
         return 1  # one all-gather (but p·m bytes), zero ppermutes
-    return scan_api.get_algorithm("exclusive", algorithm).schedule(
-        p).rounds
+    return scan_api.get_algorithm(kind, algorithm).schedule(
+        p, segments).rounds
+
+
+def expected_ops(algorithm: str, p: int, *, kind: str = "exclusive",
+                 segments: int = 1, commutative: bool = False) -> int:
+    """⊕ executions per device of a registered algorithm, derived
+    from its schedule (``Schedule.op_count``), honouring the
+    commutative-monoid elision in butterfly/scan_reduce rounds."""
+    return scan_api.get_algorithm(kind, algorithm).schedule(
+        p, segments).op_count(commutative)

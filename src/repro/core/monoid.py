@@ -32,7 +32,12 @@ class Monoid:
         non-commutative monoids are supported.
       identity_like: maps a pytree of arrays to the identity element of
         the same structure/shape/dtype.
-      commutative: informational only (enables extra test oracles).
+      commutative: whether ``op(a, b) == op(b, a)``.  Operative, not
+        informational: the executors elide the redundant combine order
+        in butterfly ``exchange`` (2→1 ⊕) and fused ``scan_reduce``
+        (3→2 ⊕) rounds for commutative monoids, and the planner /
+        ``Schedule.op_count`` price the elided counts (also enables
+        extra test oracles).
       op_cost: relative cost of one ⊕ application per payload byte
         (1.0 = elementwise add).  Feeds the γ term of the scan planner's
         cost model (scan_api.CostModel) — "expensive" operators push the

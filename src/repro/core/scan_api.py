@@ -305,8 +305,9 @@ def _resolve_cm(cm, axis_name) -> CostModel:
 
 
 # The planner only considers power-of-two segment counts (exact byte
-# prediction for power-of-two payloads, bounded padding) up to this cap
-# (keeps the unrolled round count of traced segmented rings sane).
+# prediction for power-of-two payloads, bounded padding) up to this
+# cap.  Since the rolled round-table executor the traced ring is O(1)
+# in S, so the cap only bounds padding slack and pipeline fill cost.
 MAX_SEGMENTS = 64
 
 
@@ -668,7 +669,11 @@ def _candidate_plans(spec: ScanSpec, p: int, nbytes: int,
     def one(algo: ScanAlgorithm, S: int) -> ScanPlan:
         sched = algo.schedule(p, S)
         rounds = sched.rounds
-        ops = sched.op_applications
+        # monoid-aware: commutative monoids elide the redundant
+        # combine order in butterfly exchange (2→1) and scan_reduce
+        # (3→2) rounds — the executors apply the same elision, so
+        # the prediction still equals collect_stats() measurement
+        ops = sched.op_count(mono.commutative)
         ag = sched.allgathers
         seg_bytes = -(-nbytes // S) if nbytes else 0
         wire = rounds * seg_bytes + ag * p * nbytes

@@ -44,6 +44,33 @@ power-of-two p a single (prefix, total) butterfly computes both in
 locally and broadcasts it — either way one schedule, one payload
 stream, instead of two back-to-back collectives.
 
+Execution engine (compiled round tables):  the SPMD executor lowers
+homogeneous step runs through per-round parameter *tables* instead of
+re-deriving everything inside an open-coded Python loop.  Runs whose
+rounds share one peer permutation — the segmented ring, whose p−2+S
+rounds all ppermute r → r+1 — roll into a SINGLE ``lax.scan`` body
+driven by the stacked round parameters (the per-round segment index
+``t`` as a ``jnp`` array), so trace size and compile time are O(1) in
+p and S rather than O(p+S).  Rounds whose peer offsets vary (doubling
+shift chains, butterfly exchanges) must keep one ``ppermute`` trace
+site each — XLA's ``ppermute`` takes a *static* permutation — but
+those chains are O(log p) rounds by construction, so their traces
+stay logarithmic.  The rolled ring is additionally *double-buffered*:
+each loop iteration first issues round t's ``ppermute`` and only then
+stores round t−1's received segment (carried as the pending
+double-buffer), so XLA can overlap the neighbour communication with
+the previous round's combine/store work; the final pending store
+drains after the loop.  ``SPMDExecutor(unrolled=True)`` keeps the
+legacy one-trace-site-per-round ring for the rolled-vs-unrolled
+bit-identity law the tests enforce.
+
+⊕ accounting is monoid-aware: for commutative monoids the butterfly
+``exchange`` elides the redundant second combine order (2→1 ⊕) and the
+fused ``scan_reduce`` round folds the window total once (3→2 ⊕);
+``RoundStep.op_count(commutative)`` / ``Schedule.op_count`` expose the
+elided counts, the planner prices them, and the executors record
+exactly them into :func:`collect_stats`.
+
 Byte prediction note: the plan's ``bytes_on_wire`` for a segmented
 schedule is ``rounds · ceil(m/S)``; the traced program zero-pads each
 flattened leaf up to a multiple of S, so prediction and measurement
@@ -211,7 +238,19 @@ class RoundStep:
 
     @property
     def ops(self) -> int:
-        """⊕ executions per device (SPMD lockstep) for this step."""
+        """⊕ executions per device (SPMD lockstep) for this step,
+        for a non-commutative monoid (the worst case)."""
+        return self.op_count(commutative=False)
+
+    def op_count(self, commutative: bool = False) -> int:
+        """⊕ executions per device for this step.
+
+        Commutative monoids elide the redundant combine order: a
+        butterfly ``exchange`` computes one combine instead of both
+        orders (2→1), and a fused ``scan_reduce`` round folds the
+        window total once instead of twice (3→2).  The executors
+        apply the same elision, so plans priced off this count match
+        :func:`collect_stats` measurements for every monoid."""
         n = 0
         if self.kind == "shift":
             n += 1 if self.send == "w_op_x" else 0
@@ -219,9 +258,9 @@ class RoundStep:
         elif self.kind == "seg_shift":
             n += 1 if self.prep else 0
         elif self.kind == "exchange":
-            n += 2
+            n += 1 if commutative else 2
         elif self.kind == "scan_reduce":
-            n += 3
+            n += 2 if commutative else 3
         elif self.kind == "fold":
             n += self.fold_count
         elif self.kind == "merge":
@@ -293,7 +332,14 @@ class Schedule:
 
     @property
     def op_applications(self) -> int:
-        return sum(s.ops for s in self.steps)
+        """⊕ executions for a non-commutative monoid (worst case);
+        use :meth:`op_count` for the monoid-aware number."""
+        return self.op_count(commutative=False)
+
+    def op_count(self, commutative: bool = False) -> int:
+        """⊕ executions per device, honouring the commutative-monoid
+        elision in butterfly/scan_reduce rounds."""
+        return sum(s.op_count(commutative) for s in self.steps)
 
     @property
     def allgathers(self) -> int:
@@ -833,30 +879,42 @@ class Executor:
 
     ``combine`` is the RoundStep ⊕ hook — subclasses may lower it onto
     different compute substrates (the Pallas executor runs it through
-    the on-chip block-combine kernel)."""
+    the on-chip block-combine kernel).  ``masked_combine`` is the fused
+    masked form a shift round uses: ONE select on the combine output
+    (W ← keep ? lo ⊕ hi : hi) instead of the legacy identity-fixup
+    pass + combine + select triple."""
 
     def combine(self, m: monoid_lib.Monoid, lo, hi):
         """⊕ with ``lo`` covering the lower ranks."""
         return m.op(lo, hi)
 
+    def masked_combine(self, m: monoid_lib.Monoid, keep, lo, hi):
+        """Fused masked ⊕: where(keep, lo ⊕ hi, hi), selecting once on
+        the combine output.  ``lo`` may be ppermute zero-fill on
+        non-kept ranks — the select discards it, so no identity fixup
+        pass is needed."""
+        combined = self.combine(m, lo, hi)
+        return jax.tree.map(
+            lambda c, h: jnp.where(keep, c, h), combined, hi)
+
     def execute(self, schedule: Schedule, x, m: monoid_lib.Monoid):
         raise NotImplementedError
+
+
+def _ppermute_up(tree, axis_name, skip: int, p: int):
+    """The raw ppermute of one shift round (no stats recording):
+    rank r sends to r+skip (r+skip < p); non-receiving ranks get
+    zero-fill, which callers mask away."""
+    perm = [(r, r + skip) for r in range(p - skip)]
+    return jax.tree.map(lambda t: lax.ppermute(t, axis_name, perm), tree)
 
 
 def _shift_up(tree, axis_name, skip: int, p: int):
     """One communication round: rank r sends to r+skip (r+skip < p).
 
     Non-receiving ranks get zero-fill from ppermute; callers mask."""
-    perm = [(r, r + skip) for r in range(p - skip)]
     _record_round(tree)
-    return jax.tree.map(lambda t: lax.ppermute(t, axis_name, perm), tree)
-
-
-def _fixup_identity(m: monoid_lib.Monoid, recv, has_src):
-    """Replace zero-fill from ppermute with the monoid identity."""
-    ident = m.identity_like(recv)
-    return jax.tree.map(
-        lambda t, i: jnp.where(has_src, t, i), recv, ident)
+    return _ppermute_up(tree, axis_name, skip, p)
 
 
 class SPMDExecutor(Executor):
@@ -867,10 +925,24 @@ class SPMDExecutor(Executor):
     Composed multi-axis schedules carry per-step axis tags and run as
     one program.  MPI rank conditionals become the schedule's receive
     masks: a rank with no source "receives" the monoid identity, making
-    the combine a no-op (DESIGN.md §2)."""
+    the combine a no-op (DESIGN.md §2) — implemented as ONE select on
+    the combine output (:meth:`Executor.masked_combine`), not a
+    separate identity-fixup pass.
 
-    def __init__(self, axis_name=None):
+    Homogeneous runs execute through compiled round tables: the
+    segmented ring's rounds all share the r → r+1 neighbour
+    permutation, so the whole run rolls into a single ``lax.scan``
+    body over the stacked per-round segment indices — trace size O(1)
+    in p and S — with the ring double-buffered (round t's ppermute is
+    issued before round t−1's store; see :meth:`_run_segmented`).
+    ``unrolled=True`` keeps one trace site per ring round (the legacy
+    form) for the rolled-vs-unrolled bit-identity law; varying-offset
+    rounds (shift chains, butterfly exchanges) always trace one
+    ``ppermute`` site each, as XLA permutations are static."""
+
+    def __init__(self, axis_name=None, *, unrolled: bool = False):
         self.axis_name = axis_name
+        self.unrolled = unrolled
 
     def execute(self, sched: Schedule, x, m: monoid_lib.Monoid):
         if sched.layout is not None:
@@ -932,12 +1004,12 @@ class SPMDExecutor(Executor):
                 recv = _shift_up(src, axis, st.skip, p)
                 has = (r >= st.bound) if st.mask == "ge" else \
                     (r > st.bound)
-                recv = _fixup_identity(m, recv, has)
                 if st.combine == "op":
-                    combined = self.combine(m, recv, w)
+                    # fused masked combine: one select on the combine
+                    # output; ppermute zero-fill on maskless ranks is
+                    # discarded by the select, no identity fixup pass
+                    w = self.masked_combine(m, has, recv, w)
                     _record_op()
-                    w = jax.tree.map(
-                        lambda c, v: jnp.where(has, c, v), combined, w)
                 else:  # "copy"
                     w = jax.tree.map(
                         lambda c, v: jnp.where(has, c, v), recv, w)
@@ -946,12 +1018,17 @@ class SPMDExecutor(Executor):
                 _record_round(w)
                 recv = jax.tree.map(
                     lambda t: lax.ppermute(t, axis, perm), w)
-                low_side = (r & st.skip) != 0  # partner is lower block
-                lo = self.combine(m, recv, w)
-                hi = self.combine(m, w, recv)
-                _record_op(2)
-                w = jax.tree.map(
-                    lambda a, b: jnp.where(low_side, a, b), lo, hi)
+                if m.commutative:
+                    # both combine orders agree: compute one (2→1 ⊕)
+                    w = self.combine(m, recv, w)
+                    _record_op()
+                else:
+                    low_side = (r & st.skip) != 0  # partner is lower
+                    lo = self.combine(m, recv, w)
+                    hi = self.combine(m, w, recv)
+                    _record_op(2)
+                    w = jax.tree.map(
+                        lambda a, b: jnp.where(low_side, a, b), lo, hi)
             elif st.kind == "allgather":
                 _record_allgather()
                 gathered = jax.tree.map(
@@ -980,15 +1057,23 @@ class SPMDExecutor(Executor):
         """The fused exscan+allreduce butterfly: W carries the window
         total T (entering as V via init="x"), the auxiliary P the
         exclusive prefix; each round exchanges T with r^skip and the
-        lower side folds the received total into P as well."""
+        lower side folds the received total into P as well.  The
+        identity init of P is hoisted out of the round loop; for
+        commutative monoids the two T combine orders collapse into
+        one (3→2 ⊕ per round)."""
         r = lax.axis_index(axis)
-        prefix = m.identity_like(x)
+        prefix = m.identity_like(x)  # hoisted: built once per run
         for st in steps:
             perm = [(i, i ^ st.skip) for i in range(p)]
             _record_round(w)
             recv = jax.tree.map(
                 lambda t: lax.ppermute(t, axis, perm), w)
             low_side = (r & st.skip) != 0  # partner covers lower ranks
+            if m.commutative:
+                prefix = self.masked_combine(m, low_side, recv, prefix)
+                w = self.combine(m, recv, w)
+                _record_op(2)
+                continue
             new_p = self.combine(m, recv, prefix)
             t_lo = self.combine(m, recv, w)
             t_hi = self.combine(m, w, recv)
@@ -1002,33 +1087,84 @@ class SPMDExecutor(Executor):
     def _run_segmented(self, steps, x, m, axis, p, S):
         """The pipelined ring: stream S leaf row-blocks through
         neighbour rounds; per-rank segment indices are dynamic
-        (rank r handles segment t+1−r in round t)."""
+        (rank r handles segment t+1−r in round t).
+
+        All rounds share the r → r+1 neighbour permutation, so the run
+        compiles to a round table: the per-round segment indices
+        ``t`` stack into one array and a single ``lax.scan`` body
+        executes every round — trace size O(1) in p and S.  The body
+        is double-buffered: round t's ppermute is issued FIRST, then
+        round t−1's received segment (the pending buffer in the carry)
+        is stored, so XLA overlaps the neighbour communication with
+        the previous round's store; the last pending segment drains
+        after the loop.  The segment-shaped identity is built once,
+        outside the rounds.  ``unrolled=True`` runs the legacy
+        one-trace-site-per-round loop instead (bit-identical outputs;
+        the property the tests enforce)."""
         r = lax.axis_index(axis)
         V = jax.tree.map(lambda a: _jnp_split(a, S), x)
         R = m.identity_like(V)
         cur = jax.tree.map(lambda a: a[0], V)  # rank 0 sends V[0] first
+        # hoisted out of the rounds: ONE segment-shaped identity
+        ident = m.identity_like(cur)
+        # the loop body below is traced once; stats mean executions
         for st in steps:
-            s_recv = st.t + 1 - r
+            _record_round(cur)
+            if st.prep:
+                _record_op()
+
+        def seg_of(tree, slot):
+            return jax.tree.map(
+                lambda t: lax.dynamic_slice_in_dim(t, slot, 1, 0)[0],
+                tree)
+
+        def store(acc, seg, valid, slot):
+            old = jax.tree.map(
+                lambda t: lax.dynamic_slice_in_dim(t, slot, 1, 0), acc)
+            upd = jax.tree.map(
+                lambda o, c: jnp.where(valid, c[None], o), old, seg)
+            return jax.tree.map(
+                lambda t, u: lax.dynamic_update_slice_in_dim(
+                    t, u, slot, 0), acc, upd)
+
+        def prep(recv, valid, sc):
+            # forward Q = recv ⊕ V[s] next round (rank 0: the identity
+            # base makes this plain V[t+1], its next raw segment)
+            base = jax.tree.map(
+                lambda t, i: jnp.where(valid, t, i), recv, ident)
+            return self.combine(m, base, seg_of(V, sc))
+
+        if self.unrolled:
+            for st in steps:
+                s_recv = st.t + 1 - r
+                valid = (r >= 1) & (s_recv >= 0) & (s_recv < S)
+                sc = jnp.clip(s_recv, 0, S - 1)
+                recv = _ppermute_up(cur, axis, 1, p)
+                R = store(R, recv, valid, sc)
+                if st.prep:
+                    cur = prep(recv, valid, sc)
+            return jax.tree.map(_jnp_unsplit, R, x)
+
+        def body(carry, t):
+            cur, pend, pvalid, pslot, R = carry
+            # round t's communication is issued before round t−1's
+            # store — the pending double-buffer XLA overlaps with it
+            recv = _ppermute_up(cur, axis, 1, p)
+            R = store(R, pend, pvalid, pslot)
+            s_recv = t + 1 - r
             valid = (r >= 1) & (s_recv >= 0) & (s_recv < S)
             sc = jnp.clip(s_recv, 0, S - 1)
-            recv = _shift_up(cur, axis, 1, p)
-            recv = _fixup_identity(m, recv, valid)
-            # store: R[s] <- recv where the receive is in-window
-            old = jax.tree.map(
-                lambda t: lax.dynamic_slice_in_dim(t, sc, 1, 0), R)
-            upd = jax.tree.map(
-                lambda o, c: jnp.where(valid, c[None], o), old, recv)
-            R = jax.tree.map(
-                lambda t, u: lax.dynamic_update_slice_in_dim(
-                    t, u, sc, 0), R, upd)
-            if st.prep:
-                # forward Q = recv ⊕ V[s] next round (rank 0: identity
-                # fixup makes this plain V[t+1], its next raw segment)
-                v_s = jax.tree.map(
-                    lambda t: lax.dynamic_slice_in_dim(t, sc, 1, 0)[0],
-                    V)
-                cur = self.combine(m, recv, v_s)
-                _record_op()
+            cur = prep(recv, valid, sc)
+            return (cur, recv, valid, sc, R), None
+
+        # The rolled body preps every iteration; the final (drain)
+        # round's prep is dead — its result never leaves the loop —
+        # so stats count the IR's p−3+S preps, the result-path ⊕.
+        ts = jnp.asarray([st.t for st in steps], dtype=jnp.int32)
+        init = (cur, ident, jnp.zeros((), bool),
+                jnp.zeros((), jnp.int32), R)
+        (_, pend, pvalid, pslot, R), _ = lax.scan(body, init, ts)
+        R = store(R, pend, pvalid, pslot)  # drain the last round
         return jax.tree.map(_jnp_unsplit, R, x)
 
 
@@ -1047,18 +1183,36 @@ class PallasExecutor(SPMDExecutor):
         self.interpret = interpret
         self.block_rows = block_rows
 
+    def _interpret(self) -> bool:
+        if self.interpret is None:
+            return jax.default_backend() != "tpu"
+        return self.interpret
+
     def combine(self, m: monoid_lib.Monoid, lo, hi):
         if m.leaf_op is None:
             return super().combine(m, lo, hi)
         from repro.kernels.blelloch_exscan import block_combine
 
-        interpret = self.interpret
-        if interpret is None:
-            interpret = jax.default_backend() != "tpu"
+        interpret = self._interpret()
         return jax.tree.map(
             lambda a, b: block_combine(
                 a, b, m.leaf_op, block_rows=self.block_rows,
                 interpret=interpret), lo, hi)
+
+    def masked_combine(self, m: monoid_lib.Monoid, keep, lo, hi):
+        """The fused masked path: select(keep, a ⊕ b, b) in ONE pass
+        through VMEM (the kernel's ``keep`` operand), instead of a
+        combine kernel launch followed by a host-graph select."""
+        if m.leaf_op is None:
+            return super().masked_combine(m, keep, lo, hi)
+        from repro.kernels.blelloch_exscan import block_combine
+
+        interpret = self._interpret()
+        return jax.tree.map(
+            lambda a, b: block_combine(
+                a, b, m.leaf_op, keep=keep,
+                block_rows=self.block_rows, interpret=interpret),
+            lo, hi)
 
 
 class SimulatorExecutor(Executor):
@@ -1122,11 +1276,12 @@ class SimulatorExecutor(Executor):
                                     _run_seg_count(run, sched))
             elif run[0].kind == "scan_reduce":
                 prefix = self._run_scan_reduce(run, X, W, op, ident_fn,
-                                               groups)
+                                               groups, m.commutative)
                 if run[-1].reg:
                     regs[run[-1].reg] = prefix
             else:
-                self._run_steps(run, X, W, op, ident_fn, groups)
+                self._run_steps(run, X, W, op, ident_fn, groups,
+                                m.commutative)
         outs = []
         for o in sched.outputs:
             vals = W if o == "$w" else regs[o]
@@ -1134,7 +1289,8 @@ class SimulatorExecutor(Executor):
                 lambda *ws: np.stack(ws, axis=0), *vals))
         return outs[0] if len(outs) == 1 else tuple(outs)
 
-    def _run_steps(self, steps, X, W, op, ident_fn, groups):
+    def _run_steps(self, steps, X, W, op, ident_fn, groups,
+                   commutative=False):
         gathered: dict = {}
         for st in steps:
             if st.kind == "shift":
@@ -1164,12 +1320,16 @@ class SimulatorExecutor(Executor):
                                 else op(recv, old[q])
             elif st.kind == "exchange":
                 _record_round(W[groups[0][0]])
-                _record_op(2)
+                _record_op(st.op_count(commutative))
                 for g in groups:
                     old = [W[i] for i in g]
                     for q, i in enumerate(g):
                         j = q ^ st.skip
-                        W[i] = op(old[j], old[q]) if q & st.skip \
+                        # commutative monoids compute one combine
+                        # order (2→1 ⊕ in SPMD lockstep); order here
+                        # matches the SPMD executor bit-for-bit
+                        W[i] = op(old[j], old[q]) if (
+                            commutative or q & st.skip) \
                             else op(old[q], old[j])
             elif st.kind == "allgather":
                 _record_allgather()
@@ -1191,11 +1351,12 @@ class SimulatorExecutor(Executor):
                     for i in g:
                         W[i] = root_val
 
-    def _run_scan_reduce(self, steps, X, W, op, ident_fn, groups):
+    def _run_scan_reduce(self, steps, X, W, op, ident_fn, groups,
+                         commutative=False):
         prefix = [ident_fn(v) for v in X]
         for st in steps:
             _record_round(W[groups[0][0]])
-            _record_op(3)
+            _record_op(st.op_count(commutative))
             for g in groups:
                 old = [W[i] for i in g]
                 for q, i in enumerate(g):
@@ -1204,24 +1365,29 @@ class SimulatorExecutor(Executor):
                         prefix[i] = op(old[j], prefix[i])
                         W[i] = op(old[j], old[q])
                     else:
-                        W[i] = op(old[q], old[j])
+                        # commutative: one combine order (3→2 ⊕)
+                        W[i] = op(old[j], old[q]) if commutative \
+                            else op(old[q], old[j])
         return prefix
 
     def _run_segmented(self, steps, X, W, op, ident_fn, groups, S):
         state = []
+        seg_of = (lambda v, s: jax.tree.map(lambda a: a[s], v))
         for g in groups:
             Vs = [jax.tree.map(lambda a: _np_split(a, S), X[i])
                   for i in g]
             R = [ident_fn(v) for v in Vs]
             cur = [jax.tree.map(lambda a: a[0].copy(), v) for v in Vs]
-            state.append((Vs, R, cur))
-        seg_of = (lambda v, s: jax.tree.map(lambda a: a[s], v))
+            # hoisted out of the rounds: one segment-shaped identity
+            # per rank (was rebuilt every round for pre-window ranks)
+            idents = [ident_fn(seg_of(v, 0)) for v in Vs]
+            state.append((Vs, R, cur, idents))
         for st in steps:
             _record_round(state[0][2][0])
             if st.prep:
                 _record_op()
             for gi, g in enumerate(groups):
-                Vs, R, cur = state[gi]
+                Vs, R, cur, idents = state[gi]
                 pg = len(g)
                 recv = [None] + cur[:-1]  # neighbour shift r-1 -> r
                 ncur = list(cur)
@@ -1229,17 +1395,16 @@ class SimulatorExecutor(Executor):
                     s = st.t + 1 - q
                     valid = q >= 1 and 0 <= s < S
                     sc = min(max(s, 0), S - 1)
-                    base = recv[q] if valid else \
-                        ident_fn(seg_of(Vs[q], sc))
+                    base = recv[q] if valid else idents[q]
                     if valid:
                         R[q] = jax.tree.map(
                             lambda acc, b: _np_set_seg(acc, sc, b),
                             R[q], base)
                     if st.prep:
                         ncur[q] = op(base, seg_of(Vs[q], sc))
-                state[gi] = (Vs, R, ncur)
+                state[gi] = (Vs, R, ncur, idents)
         for gi, g in enumerate(groups):
-            Vs, R, _ = state[gi]
+            Vs, R, _, _ = state[gi]
             for q, i in enumerate(g):
                 W[i] = jax.tree.map(_np_unsplit, R[q],
                                     jax.tree.map(np.asarray, X[i]))
@@ -1273,6 +1438,55 @@ def _np_set_seg(acc, s: int, value):
     acc = np.asarray(acc).copy()
     acc[s] = value
     return acc
+
+
+# ---------------------------------------------------------------------------
+# Trace-size accounting (the compiled-round-table win, measurable)
+# ---------------------------------------------------------------------------
+
+
+def jaxpr_eqn_count(jaxpr) -> int:
+    """Total equation count of a (closed) jaxpr, including nested
+    sub-jaxprs (a rolled ``lax.scan`` body counts once — the honest
+    metric for the round-table trace-size win; an unrolled ring pays
+    its body once per round)."""
+    if hasattr(jaxpr, "jaxpr"):  # ClosedJaxpr
+        jaxpr = jaxpr.jaxpr
+    n = 0
+    for eq in jaxpr.eqns:
+        n += 1
+        for v in eq.params.values():
+            vs = v if isinstance(v, (list, tuple)) else (v,)
+            for sub in vs:
+                if hasattr(sub, "jaxpr") or hasattr(sub, "eqns"):
+                    n += jaxpr_eqn_count(sub)
+    return n
+
+
+def trace_eqn_count(sched: Schedule, m: monoid_lib.Monoid, x, *,
+                    axis_name="x", mesh=None,
+                    unrolled: bool = False) -> int:
+    """Equation count of the schedule's traced SPMD program (no
+    compilation, no execution — ``jax.make_jaxpr`` under
+    ``shard_map``).  ``x`` carries a leading rank axis of size p;
+    requires a mesh (or enough devices to build one) spanning p."""
+    from jax import shard_map
+    from jax.sharding import Mesh
+    from jax.sharding import PartitionSpec as P
+
+    if mesh is None:
+        devs = jax.devices()
+        if len(devs) < sched.p:
+            raise RuntimeError(
+                f"tracing a p={sched.p} schedule needs {sched.p} "
+                f"devices, have {len(devs)}")
+        mesh = Mesh(np.array(devs[:sched.p]).reshape(sched.p),
+                    (axis_name,))
+    ex = SPMDExecutor(axis_name, unrolled=unrolled)
+    specs = jax.tree.map(lambda _: P(axis_name), x)
+    fn = shard_map(lambda v: ex.execute(sched, v, m), mesh=mesh,
+                   in_specs=(specs,), out_specs=specs)
+    return jaxpr_eqn_count(jax.make_jaxpr(fn)(x))
 
 
 # ---------------------------------------------------------------------------

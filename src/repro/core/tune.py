@@ -124,14 +124,20 @@ def nnls(A, b, *, max_iter: int | None = None,
 
 
 def schedule_features(sched: "schedule_lib.Schedule", nbytes: int,
-                      op_cost: float = 1.0) -> tuple[float, float, float]:
+                      op_cost: float = 1.0, *,
+                      commutative: bool = False
+                      ) -> tuple[float, float, float]:
     """(latency_hops, serial_bytes, op_bytes) counted off the IR.
 
     Mirrors the planner's pricing conventions exactly
     (``scan_api._candidate_plans``): all-gathers cost p−1 ring hops and
     p·m wire bytes; a pipelined-ring round carries ⌈m/S⌉ bytes; the γ
     regressor is total ⊕ executions × the per-⊕ segment bytes × the
-    monoid's relative op cost."""
+    monoid's relative op cost.  ``commutative`` applies the same
+    combine-order elision the executors and planner apply
+    (``Schedule.op_count``) — butterfly exchange 2→1, scan_reduce 3→2
+    ⊕ per round — so fitted γ constants price elided schedules
+    consistently."""
     p = sched.p
     seg = max((st.seg or sched.n_segments for st in sched.steps
                if st.kind == "seg_shift"), default=1)
@@ -145,7 +151,7 @@ def schedule_features(sched: "schedule_lib.Schedule", nbytes: int,
         elif st.kind in ("allgather", "bcast"):
             hops += p - 1
             wire += p * nbytes
-    op_bytes = sched.op_applications * -(-nbytes // seg) * op_cost
+    op_bytes = sched.op_count(commutative) * -(-nbytes // seg) * op_cost
     return hops, wire, op_bytes
 
 
@@ -266,11 +272,13 @@ def calibration_sweep(tier: str, truth: CostModel, *,
                       monoid="add") -> list[Sample]:
     """Time every registered algorithm's schedule over the (p × m)
     sweep on one tier; returns the fit's :class:`Sample` rows."""
-    op_cost = getattr(monoid_lib.get(monoid), "op_cost", 1.0)
+    mono = monoid_lib.get(monoid)
+    op_cost = getattr(mono, "op_cost", 1.0)
     samples = []
     for kind, name, p, m, S in _sweep_cases(ps, ms):
         sched = scan_api.get_algorithm(kind, name).schedule(p, S)
-        feats = schedule_features(sched, m, op_cost)
+        feats = schedule_features(sched, m, op_cost,
+                                  commutative=mono.commutative)
         if clock == "simulated":
             seconds, measured = measure_schedule_simulated(
                 sched, m, truth, monoid=monoid)

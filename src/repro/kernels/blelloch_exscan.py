@@ -44,9 +44,24 @@ def _combine_kernel(op, a_ref, b_ref, o_ref):
     o_ref[...] = op(a_ref[...], b_ref[...])
 
 
+def _masked_combine_kernel(op, a_ref, b_ref, k_ref, o_ref):
+    """Fused masked combine: o = keep ? a ⊕ b : b, one VMEM pass.
+
+    ``k_ref`` is the (1, 1) keep scalar in SMEM (scalars must be 2D
+    in scalar memory).  The select runs on the combine output inside
+    the tile, so a masked SPMD round (a rank with no source) costs
+    the same single pass as an unmasked one — no separate
+    fixup/select sweeps over HBM."""
+    keep = k_ref[0, 0] != 0
+    a = a_ref[...]
+    b = b_ref[...]
+    o_ref[...] = jnp.where(keep, op(a, b), b)
+
+
 @functools.partial(jax.jit,
                    static_argnames=("op", "block_rows", "interpret"))
 def block_combine(a: jax.Array, b: jax.Array, op, *,
+                  keep: jax.Array | None = None,
                   block_rows: int = 256,
                   interpret: bool = False) -> jax.Array:
     """Elementwise ⊕ of two same-shape arrays, tiled through VMEM.
@@ -61,6 +76,10 @@ def block_combine(a: jax.Array, b: jax.Array, op, *,
     Args:
       a, b: same shape/dtype; ``a`` is the low-rank-side operand.
       op: elementwise jnp function applied to whole VMEM tiles.
+      keep: optional scalar predicate (the SPMD receive mask).  When
+        given, the kernel computes ``keep ? a ⊕ b : b`` fused in one
+        pass — the masked-combine path of a schedule's shift round —
+        instead of a combine kernel plus a separate select sweep.
     """
     assert a.shape == b.shape and a.dtype == b.dtype, (a, b)
     shape = a.shape
@@ -81,17 +100,27 @@ def block_combine(a: jax.Array, b: jax.Array, op, *,
         wa = jnp.pad(wa, ((0, rpad), (0, 0)))
         wb = jnp.pad(wb, ((0, rpad), (0, 0)))
     grid = (wa.shape[0] // br,)
-    out = pl.pallas_call(
-        functools.partial(_combine_kernel, op),
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((br, lane), lambda i: (i, 0)),
-            pl.BlockSpec((br, lane), lambda i: (i, 0)),
-        ],
-        out_specs=pl.BlockSpec((br, lane), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct(wa.shape, a.dtype),
-        interpret=interpret,
-    )(wa, wb)
+    tile = pl.BlockSpec((br, lane), lambda i: (i, 0))
+    if keep is None:
+        out = pl.pallas_call(
+            functools.partial(_combine_kernel, op),
+            grid=grid,
+            in_specs=[tile, tile],
+            out_specs=tile,
+            out_shape=jax.ShapeDtypeStruct(wa.shape, a.dtype),
+            interpret=interpret,
+        )(wa, wb)
+    else:
+        k = jnp.reshape(jnp.asarray(keep, jnp.int32), (1, 1))
+        out = pl.pallas_call(
+            functools.partial(_masked_combine_kernel, op),
+            grid=grid,
+            in_specs=[tile, tile,
+                      pl.BlockSpec(memory_space=pltpu.SMEM)],
+            out_specs=tile,
+            out_shape=jax.ShapeDtypeStruct(wa.shape, a.dtype),
+            interpret=interpret,
+        )(wa, wb, k)
     return out.reshape(-1)[:n].reshape(shape)
 
 

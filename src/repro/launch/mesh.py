@@ -99,6 +99,28 @@ def use_calibrated_profile(mesh=None,
     return prof
 
 
+def fake_device_env(n_devices: int, env=None) -> dict:
+    """Environment for a subprocess that must see ``n_devices`` fake
+    CPU devices (jax fixes the count at first init, so a fresh
+    process is the only way to change it).
+
+    Strips ANY inherited device-count flag first: XLA honours the
+    LAST ``--xla_force_host_platform_device_count`` occurrence, so an
+    ambient count (CI env, the dry-run's 512) would silently override
+    the requested one.  Shared by ``tests/helpers.run_with_devices``
+    and ``benchmarks/exec_bench.py``."""
+    import os
+
+    out = dict(os.environ if env is None else env)
+    inherited = [f for f in out.get("XLA_FLAGS", "").split()
+                 if not f.startswith(
+                     "--xla_force_host_platform_device_count=")]
+    out["XLA_FLAGS"] = " ".join(
+        [f"--xla_force_host_platform_device_count={n_devices}"]
+        + inherited)
+    return out
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")

@@ -68,14 +68,70 @@ class CollectiveStats:
         return sum(self.op_counts.values())
 
 
-def parse_collectives(hlo_text: str) -> CollectiveStats:
+_COMP_HEADER_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\{\s*$")
+_WHILE_BODY_RE = re.compile(r"\bbody=%?([\w.\-]+)")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+# every attribute form through which an op invokes a sub-computation
+# (conditional branches, reduce/sort/fusion bodies, async wrappers,
+# while conditions) — each runs once per execution of the referencing
+# op; while BODIES additionally multiply by the loop trip count
+_CALLED_RE = re.compile(
+    r"\b(?:calls|to_apply|condition|true_computation|"
+    r"false_computation|called_computation)=%?([\w.\-]+)")
+_BRANCHES_RE = re.compile(r"\bbranch_computations=\{([^}]*)\}")
+_COLLECTIVE_LINE_RE = re.compile(
+    r"(?:ROOT )?%?[\w.\-]+ = (\(?[^)]*?\)?) "
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute)(-start|-done)?\(")
+
+
+def _split_computations(hlo_text: str):
+    """(computations, entry): computation name -> its op lines.  HLO
+    text defines computations at column 0 with indented op lines."""
+    comps: dict[str, list] = {}
+    entry = None
+    cur = None
+    for raw in hlo_text.splitlines():
+        if raw.startswith(" "):
+            if cur is not None:
+                comps[cur].append(raw.strip())
+            continue
+        m = _COMP_HEADER_RE.match(raw)
+        if m:
+            cur = m.group(2)
+            comps[cur] = []
+            if m.group(1):
+                entry = cur
+        else:
+            cur = None
+    return comps, entry
+
+
+def _parse_collective_lines(lines):
     counts: dict[str, int] = {}
     bytes_: dict[str, float] = {}
-    for line in hlo_text.splitlines():
-        line = line.strip()
-        m = re.match(r"(?:ROOT )?%?[\w.\-]+ = (\(?[^)]*?\)?) "
-                     r"(all-reduce|all-gather|reduce-scatter|all-to-all|"
-                     r"collective-permute)(-start|-done)?\(", line)
+    called: list[tuple[str, int]] = []  # (computation, multiplier)
+    for line in lines:
+        # while BODIES execute known_trip_count times; every other
+        # sub-computation reference (conditions via _CALLED_RE,
+        # conditional branches, fusion/reduce bodies, async wrappers)
+        # runs once per invocation — none may be dropped
+        if " while(" in line:
+            wm = _WHILE_BODY_RE.search(line)
+            if wm:
+                tm = _TRIP_RE.search(line)
+                # unknown trip counts count the body once (legacy)
+                called.append((wm.group(1),
+                               int(tm.group(1)) if tm else 1))
+        for name in _CALLED_RE.findall(line):
+            called.append((name, 1))
+        bm = _BRANCHES_RE.search(line)
+        if bm:
+            for tok in bm.group(1).split(","):
+                tok = tok.strip().lstrip("%")
+                if tok:
+                    called.append((tok, 1))
+        m = _COLLECTIVE_LINE_RE.match(line)
         if not m:
             continue
         out_shapes, op, phase = m.groups()
@@ -107,6 +163,45 @@ def parse_collectives(hlo_text: str) -> CollectiveStats:
             wire = out_bytes
         counts[op] = counts.get(op, 0) + 1
         bytes_[op] = bytes_.get(op, 0.0) + wire
+    return counts, bytes_, called
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    """Dynamic collective counts/bytes of an optimized HLO module.
+
+    Loop-aware since the rolled round-table executors: the module is
+    walked computation-by-computation from ENTRY through every
+    sub-computation reference (while bodies/conditions, conditional
+    branches, fusion/reduce bodies, async wrappers), and a collective
+    inside a ``while`` body (e.g. the segmented ring's single
+    ``collective-permute`` trace site) is multiplied by the loop's
+    ``known_trip_count`` backend config — so the STATIC parse still
+    equals the dynamic round count the planner predicts: one permute
+    × (p−2+S) trips, not one op.  Unknown trip counts fall back to
+    counting the body once (the pre-rolled behaviour)."""
+    comps, entry = _split_computations(hlo_text)
+    if entry is None:  # not a full module dump: parse lines flat
+        counts, bytes_, _ = _parse_collective_lines(
+            [ln.strip() for ln in hlo_text.splitlines()])
+        return CollectiveStats(counts, bytes_)
+    memo: dict[str, tuple] = {}
+
+    def totals(name: str) -> tuple:
+        if name in memo:
+            return memo[name]
+        memo[name] = ({}, {})  # cycle guard (HLO has none, but safe)
+        counts, bytes_, called = _parse_collective_lines(
+            comps.get(name, []))
+        for sub, mult in called:
+            sub_c, sub_b = totals(sub)
+            for k, v in sub_c.items():
+                counts[k] = counts.get(k, 0) + mult * v
+            for k, v in sub_b.items():
+                bytes_[k] = bytes_.get(k, 0.0) + mult * v
+        memo[name] = (counts, bytes_)
+        return memo[name]
+
+    counts, bytes_ = totals(entry)
     return CollectiveStats(counts, bytes_)
 
 

@@ -24,16 +24,11 @@ def run_with_devices(code: str, n_devices: int = 8, x64: bool = True,
 
     Raises on non-zero exit; returns captured stdout.
     """
-    env = dict(os.environ)
-    # strip ANY inherited device-count flag: XLA honours the LAST
-    # occurrence, so an ambient count (CI env, dry-run's 512) would
-    # silently override the requested one
-    inherited = [f for f in env.get("XLA_FLAGS", "").split()
-                 if not f.startswith(
-                     "--xla_force_host_platform_device_count=")]
-    env["XLA_FLAGS"] = " ".join(
-        [f"--xla_force_host_platform_device_count={n_devices}"]
-        + inherited)
+    # the ambient-flag scrub lives with the mesh helpers so benchmarks
+    # spawn fake-device subprocesses through the same recipe
+    from repro.launch.mesh import fake_device_env
+
+    env = fake_device_env(n_devices)
     env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
     if x64:
         env["JAX_ENABLE_X64"] = "1"

@@ -1,0 +1,289 @@
+"""Compiled round-table executor laws (ISSUE-5).
+
+The acceptance properties of the rolled execution engine:
+
+  * rolled vs unrolled bit-identity — the segmented ring executed
+    through the single-``lax.scan`` round table is bit-identical to
+    the legacy one-trace-site-per-round execution at p ∈ 2..17 ×
+    S ∈ {1, 2, 4, 8} (SPMD, subprocess on 17 fake devices) for int64
+    add, and ulp-tight for the non-commutative float affine monoid
+    (XLA fuses its multiply-add differently inside a ``lax.scan``
+    body); both match the numpy simulator;
+  * every other registered algorithm traces the IDENTICAL jaxpr in
+    both modes (their rounds have varying peer offsets, so they never
+    roll — jaxpr equality implies bit-identical outputs without
+    compiling 100s of programs);
+  * the rolled ring's trace size is O(1) in p and S, and the
+    commutative-monoid ⊕ elision shrinks butterfly/scan_reduce traces;
+  * ``collectives.expected_rounds``/``expected_ops`` are derived from
+    the schedule builders and can never drift from the closed-form
+    oracle counts.
+"""
+
+import numpy as np
+
+from helpers import run_with_devices
+
+from repro.core import collectives as collectives_lib
+from repro.core import oracle
+
+
+_ROLLED_VS_UNROLLED = """
+import jax, numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+from jax import shard_map
+from repro.core import monoid as monoid_lib
+from repro.core.scan_api import ScanSpec, plan, algorithms
+from repro.core.schedule import (
+    SPMDExecutor, SimulatorExecutor, build_ring, collect_stats)
+
+devs = np.array(jax.devices())
+sim = SimulatorExecutor()
+
+def run(mesh, sched, x, m, unrolled, n_in=1):
+    ex = SPMDExecutor("x", unrolled=unrolled)
+    specs = jax.tree.map(lambda _: P("x"), x)
+    f = jax.jit(shard_map(lambda v: ex.execute(sched, v, m),
+                          mesh=mesh, in_specs=(specs,),
+                          out_specs=specs))
+    with collect_stats() as st:
+        out = jax.tree.map(np.asarray, f(x))
+    return out, st
+
+# 1) the ring: rolled (lax.scan round table, double-buffered) vs
+#    unrolled (legacy per-round trace) bit-identity, int64 add,
+#    p in 2..17 x S in {1,2,4,8}; 6 elements/rank so S=4 and S=8 pad
+checked = 0
+for p in range(2, 18):
+    mesh = Mesh(devs[:p].reshape(p), ("x",))
+    rng = np.random.default_rng(p)
+    x = rng.integers(0, 1 << 30, size=(p, 6)).astype(np.int64)
+    for S in (1, 2, 4, 8):
+        sched = build_ring(p, S)
+        rolled, st_r = run(mesh, sched, x, monoid_lib.ADD, False)
+        unrolled, st_u = run(mesh, sched, x, monoid_lib.ADD, True)
+        assert np.array_equal(rolled, unrolled), (p, S)
+        assert (st_r.rounds, st_r.op_applications) == \
+            (st_u.rounds, st_u.op_applications) == \
+            (sched.rounds, sched.op_applications), (p, S, st_r, st_u)
+        assert st_r.bytes_per_round == st_u.bytes_per_round, (p, S)
+        ref = sim.execute(sched, x, monoid_lib.ADD)
+        assert np.array_equal(rolled, np.asarray(ref)), (p, S)
+        checked += 1
+print("OK ring rolled==unrolled", checked)
+
+# 2) non-commutative float payloads through the rolled ring: affine
+#    (a, b) tuple trees.  The int sweep above is bitwise; floats get
+#    a tight allclose — XLA may fuse the affine a_hi*b_lo + b_hi into
+#    an FMA differently inside the lax.scan body than in straightline
+#    code (same ⊕ order, ulp-level rounding difference only).
+for p, S in ((2, 4), (7, 2), (12, 8), (17, 4)):
+    mesh = Mesh(devs[:p].reshape(p), ("x",))
+    rng = np.random.default_rng(100 + p)
+    a = rng.standard_normal((p, 10))
+    b = rng.standard_normal((p, 10))
+    sched = build_ring(p, S)
+    rolled, _ = run(mesh, sched, (a, b), monoid_lib.AFFINE, False)
+    unrolled, _ = run(mesh, sched, (a, b), monoid_lib.AFFINE, True)
+    for lr, lu in zip(jax.tree.leaves(rolled), jax.tree.leaves(unrolled)):
+        np.testing.assert_allclose(lr, lu, rtol=1e-13,
+                                   err_msg=str((p, S)))
+    ga, gb = sim.execute(sched, (a, b), monoid_lib.AFFINE)
+    np.testing.assert_allclose(rolled[0], ga, rtol=1e-12)
+    np.testing.assert_allclose(rolled[1], gb, rtol=1e-12)
+print("OK ring rolled==unrolled affine")
+
+# 3) every other registered algorithm: rounds have varying peer
+#    offsets, so both modes must trace the IDENTICAL jaxpr (which
+#    implies bit-identical outputs) — p in 2..17, no compilation
+same = 0
+for p in range(2, 18):
+    mesh = Mesh(devs[:p].reshape(p), ("x",))
+    x = np.arange(p * 4, dtype=np.int64).reshape(p, 4)
+    for kind in ("exclusive", "inclusive", "allreduce", "scan_total"):
+        for alg in algorithms(kind):
+            sched = plan(ScanSpec(kind=kind, algorithm=alg), p=p,
+                         nbytes=32).schedule()
+            if any(st.kind == "seg_shift" for st in sched.steps):
+                continue  # the ring: modes differ; covered above
+            outs = (P("x"),) * len(sched.outputs) \
+                if len(sched.outputs) > 1 else P("x")
+            jaxprs = []
+            for unrolled in (False, True):
+                ex = SPMDExecutor("x", unrolled=unrolled)
+                f = shard_map(
+                    lambda v: ex.execute(sched, v, monoid_lib.ADD),
+                    mesh=mesh, in_specs=P("x"), out_specs=outs)
+                jaxprs.append(str(jax.make_jaxpr(f)(x)))
+            assert jaxprs[0] == jaxprs[1], (kind, alg, p)
+            same += 1
+print("OK identical traces", same)
+
+# 4) scan_total ring (with_total over seg_shift steps): execute both
+#    modes at a couple of p to close the registered-algorithm sweep
+for p in (5, 8):
+    mesh = Mesh(devs[:p].reshape(p), ("x",))
+    x = np.arange(p * 8, dtype=np.int64).reshape(p, 8)
+    sched = plan(ScanSpec(kind="scan_total", algorithm="ring",
+                          segments=4), p=p, nbytes=64).schedule()
+    outs = {}
+    for unrolled in (False, True):
+        ex = SPMDExecutor("x", unrolled=unrolled)
+        f = jax.jit(shard_map(
+            lambda v: ex.execute(sched, v, monoid_lib.ADD),
+            mesh=mesh, in_specs=P("x"),
+            out_specs=(P("x"), P("x"))))
+        outs[unrolled] = jax.tree.map(np.asarray, f(x))
+    for lr, lu in zip(jax.tree.leaves(outs[False]),
+                      jax.tree.leaves(outs[True])):
+        assert np.array_equal(lr, lu), p
+print("OK scan_total ring rolled==unrolled")
+"""
+
+
+def test_rolled_executors_bit_identical_to_unrolled():
+    out = run_with_devices(_ROLLED_VS_UNROLLED, 17, timeout=1200)
+    assert "OK ring rolled==unrolled 64" in out  # 16 p x 4 S
+    assert "OK ring rolled==unrolled affine" in out
+    assert "OK identical traces" in out
+    assert "OK scan_total ring rolled==unrolled" in out
+
+
+_TRACE_SIZE = """
+import jax, numpy as np
+from repro.core import monoid as monoid_lib
+from repro.core.schedule import (
+    build_butterfly, build_ring, build_scan_total, trace_eqn_count)
+
+# the rolled ring's trace is O(1) in p and S: identical equation
+# counts across every (p, S); the unrolled trace grows with p+S
+eqs = {}
+for p, S in ((5, 2), (9, 4), (17, 8)):
+    x = np.arange(p * 16, dtype=np.int64).reshape(p, 16)
+    sched = build_ring(p, S)
+    eqs[(p, S)] = trace_eqn_count(sched, monoid_lib.ADD, x)
+    un = trace_eqn_count(sched, monoid_lib.ADD, x, unrolled=True)
+    assert un > (p - 2 + S) * 4, (p, S, un)  # per-round trace sites
+vals = set(eqs.values())
+assert len(vals) == 1, eqs  # O(1): independent of p and S
+# rolled beats unrolled by the acceptance floor already at p=17
+p, S = 17, 8
+x = np.arange(p * 16, dtype=np.int64).reshape(p, 16)
+sched = build_ring(p, S)
+rolled = trace_eqn_count(sched, monoid_lib.ADD, x)
+unrolled = trace_eqn_count(sched, monoid_lib.ADD, x, unrolled=True)
+assert unrolled >= 5 * rolled, (rolled, unrolled)
+
+# commutative ⊕ elision shrinks butterfly and scan_reduce traces
+p = 16
+x = np.arange(p * 4, dtype=np.int64).reshape(p, 4)
+bf = build_butterfly(p)
+assert trace_eqn_count(bf, monoid_lib.ADD, x) < \\
+    trace_eqn_count(bf, monoid_lib.AFFINE, (x, x))
+print("OK trace sizes", rolled, unrolled)
+"""
+
+
+def test_rolled_ring_trace_is_o1_in_p_and_s():
+    out = run_with_devices(_TRACE_SIZE, 17)
+    assert "OK trace sizes" in out
+
+
+# ---------------------------------------------------------------------------
+# expected_rounds / expected_ops: derived from the schedule builders,
+# drift-tested against the closed-form oracle counts (no devices).
+# ---------------------------------------------------------------------------
+
+
+def test_expected_rounds_cannot_drift_from_oracle():
+    ex = collectives_lib
+    for p in range(1, 65):
+        assert ex.expected_rounds("123", p) == oracle.q_123(p)
+        assert ex.expected_rounds("1doubling", p) == \
+            oracle.rounds_1doubling(p)
+        assert ex.expected_rounds("two_op", p) == oracle.rounds_two_op(p)
+        assert ex.expected_rounds("ring", p) == max(0, p - 1)
+        assert ex.expected_rounds("native", p) == 1  # legacy convention
+        for S in (4, 16):
+            assert ex.expected_rounds("ring", p, segments=S) == \
+                (0 if p <= 1 else p - 2 + S)
+        assert ex.expected_rounds("hillis_steele", p,
+                                  kind="inclusive") == \
+            oracle.rounds_two_op(p)
+        # butterfly: ⌈log₂p⌉ exchanges at power-of-two p, else the
+        # inclusive scan (+ a broadcast, which is not a ppermute round)
+        assert ex.expected_rounds("butterfly", p, kind="allreduce") == \
+            oracle.rounds_two_op(p)
+
+
+def test_expected_ops_reflects_commutative_elision():
+    ex = collectives_lib
+    for k in range(1, 7):
+        p = 1 << k
+        # butterfly: 2 ⊕ per exchange round, 1 when commutative
+        assert ex.expected_ops("butterfly", p, kind="allreduce") == 2 * k
+        assert ex.expected_ops("butterfly", p, kind="allreduce",
+                               commutative=True) == k
+        # fused scan_total butterfly: 3 ⊕ per round, 2 when commutative
+        assert ex.expected_ops("fused_doubling", p,
+                               kind="scan_total") == 3 * k
+        assert ex.expected_ops("fused_doubling", p, kind="scan_total",
+                               commutative=True) == 2 * k
+    # shift-based algorithms have no redundant combine order to elide
+    for p in (5, 9, 36):
+        for alg in ("123", "1doubling", "two_op", "ring"):
+            assert ex.expected_ops(alg, p) == \
+                ex.expected_ops(alg, p, commutative=True)
+
+
+def test_roofline_parse_is_loop_and_branch_aware():
+    """The HLO collective parse multiplies while-body collectives by
+    the loop's known trip count (the rolled ring's single permute
+    trace site = p−2+S dynamic rounds) and still counts collectives
+    inside non-while sub-computations (conditional branches)."""
+    from repro.launch.roofline import parse_collectives
+
+    hlo = """\
+HloModule m, entry_computation_layout={()->f32[8]}
+
+%branch_true (p0: f32[8]) -> f32[8] {
+  %p0 = f32[8]{0} parameter(0)
+  ROOT %ar = f32[8]{0} all-reduce(f32[8]{0} %p0), replica_groups={{0,1,2,3}}, to_apply=%add_comp
+}
+
+%branch_false (p1: f32[8]) -> f32[8] {
+  ROOT %p1 = f32[8]{0} parameter(0)
+}
+
+%loop_body (t: (s32[], f32[8])) -> (s32[], f32[8]) {
+  %t = (s32[], f32[8]) parameter(0)
+  %gte = f32[8]{0} get-tuple-element((s32[], f32[8]) %t), index=1
+  %cp = f32[8]{0} collective-permute(f32[8]{0} %gte), source_target_pairs={{0,1},{1,2}}
+  ROOT %tup = (s32[], f32[8]) tuple(s32[] %c, f32[8]{0} %cp)
+}
+
+%loop_cond (t2: (s32[], f32[8])) -> pred[] {
+  ROOT %lt = pred[] compare(s32[] %i, s32[] %n), direction=LT
+}
+
+ENTRY %main () -> f32[8] {
+  %w = (s32[], f32[8]) while((s32[], f32[8]) %init), condition=%loop_cond, body=%loop_body, backend_config={"known_trip_count":{"n":"7"}}
+  ROOT %cond = f32[8]{0} conditional(pred[] %p, f32[8]{0} %a, f32[8]{0} %b), true_computation=%branch_true, false_computation=%branch_false
+}
+"""
+    stats = parse_collectives(hlo)
+    # one permute trace site x 7 trips, one branch all-reduce
+    assert stats.op_counts["collective-permute"] == 7
+    assert stats.op_counts["all-reduce"] == 1
+    assert stats.op_bytes["collective-permute"] == 7 * 32.0
+
+
+def test_expected_ops_matches_plan_predictions():
+    from repro.core.scan_api import ScanSpec, plan
+
+    for p in (4, 8, 16):
+        for mono, comm in (("add", True), ("affine", False)):
+            pl = plan(ScanSpec(kind="allreduce", algorithm="butterfly",
+                               monoid=mono), p=p, nbytes=64)
+            assert pl.op_applications == collectives_lib.expected_ops(
+                "butterfly", p, kind="allreduce", commutative=comm)

@@ -91,6 +91,85 @@ def test_simulator_segmented_ring_unpadded_sizes():
         assert np.array_equal(got, _exclusive_ref(x)), (p, S, m)
 
 
+def test_segmented_ring_edge_cases():
+    """The pipelined ring's corner cells: p=2 (every S), S=1 at any p,
+    S > p (more segments than ranks — the pipeline is all fill), and
+    non-divisible leading dims / multi-dim leaves (padded final
+    block), simulator-executed with plan-vs-measured stats."""
+    sim = SimulatorExecutor()
+    cases = (
+        [(2, S, 5) for S in (1, 2, 4, 8)]  # p=2: n rounds == S
+        + [(p, 1, 3) for p in (2, 3, 9)]  # S=1: the plain ring
+        + [(2, 16, 3), (3, 8, 5), (5, 16, 7)]  # S > p
+        + [(4, 8, 13), (7, 4, 1)]  # S doesn't divide m
+    )
+    for p, S, m in cases:
+        x = np.arange(p * m, dtype=np.int64).reshape(p, m) + 1
+        sched = build_ring(p, S)
+        assert sched.rounds == p - 2 + S, (p, S)
+        with collect_stats() as st:
+            got = sim.execute(sched, x, monoid_lib.ADD)
+        assert np.array_equal(got, _exclusive_ref(x)), (p, S, m)
+        assert st.rounds == sched.rounds, (p, S)
+        assert st.op_applications == sched.op_applications == \
+            max(0, p - 3 + S), (p, S)
+    # multi-dim leading dims: the leaves flatten, segment, and restore
+    x = (np.arange(3 * 2 * 5, dtype=np.int64).reshape(3, 2, 5) ** 2
+         % 1009)
+    got = sim.execute(build_ring(3, 4), x, monoid_lib.ADD)
+    ref = np.zeros_like(x)
+    ref[1:] = np.cumsum(x[:-1], axis=0)
+    assert np.array_equal(got, ref)
+
+
+def test_commutative_elision_counts_and_results():
+    """Commutative monoids elide the redundant combine order:
+    butterfly exchange 2→1 ⊕, fused scan_reduce 3→2 ⊕ — on the IR
+    (``op_count``), in the plan, and in the executed stats — with
+    results unchanged."""
+    sim = SimulatorExecutor()
+    for p in (4, 8, 16):
+        k = int(np.log2(p))
+        bf = schedule_lib.build_butterfly(p)
+        assert bf.op_applications == 2 * k  # non-commutative worst case
+        assert bf.op_count(commutative=True) == k
+        x = np.arange(p * 4, dtype=np.int64).reshape(p, 4) + 1
+        with collect_stats() as st:
+            got = sim.execute(bf, x, monoid_lib.ADD)
+        assert np.array_equal(got, np.broadcast_to(x.sum(0), x.shape))
+        assert st.op_applications == k  # measured == elided prediction
+        st_sched = schedule_lib.build_scan_total(p)
+        assert st_sched.op_applications == 3 * k
+        assert st_sched.op_count(commutative=True) == 2 * k
+        with collect_stats() as st:
+            prefix, total = sim.execute(st_sched, x, monoid_lib.ADD)
+        assert np.array_equal(prefix, _exclusive_ref(x))
+        assert np.array_equal(total, np.broadcast_to(x.sum(0), x.shape))
+        assert st.op_applications == 2 * k
+        # non-commutative monoids keep both combine orders (and the
+        # correct one): matmul allreduce folds in rank order
+        mats = (np.random.default_rng(p).standard_normal((p, 3, 3))
+                * 0.5)
+        with collect_stats() as st:
+            got = sim.execute(bf, mats, monoid_lib.MATMUL)
+        acc = np.eye(3)
+        for r in range(p):
+            acc = mats[r] @ acc
+        np.testing.assert_allclose(got, np.broadcast_to(acc, got.shape),
+                                   rtol=1e-10, atol=1e-12)
+        assert st.op_applications == 2 * k
+    # plan predictions are monoid-aware and match the simulator
+    for mono in ("add", "affine"):
+        res = schedule_lib.verify_plan(
+            plan(ScanSpec(kind="allreduce", algorithm="butterfly",
+                          monoid=mono), p=8, nbytes=128))
+        assert res["ok"], (mono, res)
+        res = schedule_lib.verify_plan(
+            plan(ScanSpec(kind="scan_total", algorithm="auto",
+                          monoid=mono), p=8, nbytes=128))
+        assert res["ok"], (mono, res)
+
+
 # ---------------------------------------------------------------------------
 # The IR itself
 # ---------------------------------------------------------------------------
@@ -133,7 +212,10 @@ def test_plan_schedule_is_inspectable_without_tracing():
                p=(2, 4), nbytes=64)
     msched = mpl.schedule()
     assert msched.rounds == mpl.rounds
-    assert msched.op_applications == mpl.op_applications
+    # the plan prices the commutative (add) elision; op_applications
+    # on the IR stays the non-commutative worst case
+    assert msched.op_count(commutative=True) == mpl.op_applications
+    assert msched.op_applications >= mpl.op_applications
     assert msched.axes == (("pod", 2), ("data", 4))
     assert "@data" in msched.describe() and "@pod" in msched.describe()
     assert mpl.algorithm.startswith("composite(")
@@ -283,6 +365,24 @@ def test_block_combine_kernel_interpret():
         got = block_combine(jnp.asarray(a), jnp.asarray(b), jnp.maximum,
                             interpret=True)
         np.testing.assert_array_equal(np.asarray(got), np.maximum(a, b))
+
+
+def test_block_combine_fused_masked_path():
+    """The masked path fuses select(keep, a ⊕ b, b) into the kernel's
+    single VMEM pass (the PallasExecutor shift-round hook)."""
+    import jax.numpy as jnp
+
+    from repro.kernels.blelloch_exscan import block_combine
+
+    rng = np.random.default_rng(1)
+    for shape in [(7,), (3, 130), (256, 128)]:
+        a = rng.integers(0, 1 << 20, size=shape).astype(np.int32)
+        b = rng.integers(0, 1 << 20, size=shape).astype(np.int32)
+        for keep, want in ((True, a + b), (False, b)):
+            got = block_combine(jnp.asarray(a), jnp.asarray(b),
+                                jnp.add, keep=jnp.asarray(keep),
+                                interpret=True)
+            np.testing.assert_array_equal(np.asarray(got), want)
 
 
 # ---------------------------------------------------------------------------
