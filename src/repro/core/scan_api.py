@@ -728,9 +728,11 @@ def _plan_single(spec: ScanSpec, p: int, nbytes: int,
                                       pl.segments))
 
 
-@functools.lru_cache(maxsize=1024)
-def _plan_cached(spec: ScanSpec, ps: tuple, nbytes: int,
-                 cms: tuple) -> ScanPlan:
+PLAN_CACHE_MAXSIZE = 1024
+
+
+def _plan_impl(spec: ScanSpec, ps: tuple, nbytes: int,
+               cms: tuple) -> ScanPlan:
     """Memoized planning, keyed by *resolved* per-axis cost models.
 
     ``cms`` is one :class:`CostModel` per axis of ``spec.axes`` — the
@@ -782,6 +784,9 @@ def _plan_cached(spec: ScanSpec, ps: tuple, nbytes: int,
         cost_model=cm_top, sub_plans=subs)
 
 
+_plan_cached = functools.lru_cache(maxsize=PLAN_CACHE_MAXSIZE)(_plan_impl)
+
+
 def plan(spec: ScanSpec, p: int | tuple | None = None, *,
          nbytes: int | None = None,
          cost_model=None) -> ScanPlan:
@@ -826,11 +831,28 @@ def plan_cache_clear():
     _plan_cached.cache_clear()
 
 
+def plan_cache_resize(maxsize: int = PLAN_CACHE_MAXSIZE):
+    """Rebuild the plan cache with a new LRU capacity (entries are
+    dropped).  The cache is *always* bounded — least-recently-used
+    plans are evicted at capacity — so a long-running service cannot
+    grow it without bound; services that want a tighter ceiling than
+    :data:`PLAN_CACHE_MAXSIZE` (or a larger one for a big declared
+    bucket set) install it here before warmup."""
+    global _plan_cached
+    if maxsize is not None and maxsize < 1:
+        raise ValueError(f"plan cache maxsize must be >= 1, "
+                         f"got {maxsize}")
+    _plan_cached = functools.lru_cache(maxsize=maxsize)(_plan_impl)
+
+
 def plan_cache_info() -> dict:
-    """Plan-cache observability: hits/misses/size of the memoized
-    ``plan()`` resolution (printed by ``benchmarks/plan_table.py
-    --verbose``).  Repeated ``plan()`` calls with the same (spec, axis
-    sizes, payload bytes, cost model) signature are cache hits."""
+    """Plan-cache observability: hit/miss counters plus size of the
+    memoized ``plan()`` resolution (printed by ``benchmarks/plan_table
+    .py --verbose``; the serve subsystem's warmup gate reads the miss
+    counter to prove steady state never compiles).  Repeated ``plan()``
+    calls with the same (spec, axis sizes, payload bytes, cost model)
+    signature are cache hits; ``size`` never exceeds ``maxsize`` (LRU
+    eviction — see :func:`plan_cache_resize`)."""
     info = _plan_cached.cache_info()
     return {"hits": info.hits, "misses": info.misses,
             "size": info.currsize, "maxsize": info.maxsize}

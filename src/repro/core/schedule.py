@@ -758,9 +758,10 @@ def fuse(schedules, layout: PayloadLayout) -> Schedule:
     the packed payload (per ``layout``) rides the rounds of the
     cheapest compatible schedule, so k scans cost one scan's α·q.
 
-    All schedules must agree on (kind, p, axes) and be single-output;
-    executors pack the payload sequence on entry and unpack the k
-    results on exit."""
+    All schedules must agree on (kind, p, axes) and on their output
+    list; executors pack the payload sequence on entry and unpack the
+    results on exit — multi-output schedules (scan_total's
+    (prefix, total)) unpack to one output tuple per payload."""
     if not schedules:
         raise ValueError("fuse() needs at least one schedule")
     base = min(schedules, key=lambda s: (s.rounds, s.op_applications))
@@ -770,14 +771,33 @@ def fuse(schedules, layout: PayloadLayout) -> Schedule:
                 "fused schedules must share kind/p/axes; got "
                 f"{(s.kind, s.p, s.axes)} vs "
                 f"{(base.kind, base.p, base.axes)}")
-        if s.outputs != ("$w",):
-            raise ValueError("only single-output schedules fuse "
-                             f"(got outputs={s.outputs})")
+        if s.outputs != base.outputs:
+            raise ValueError(
+                "fused schedules must share outputs; got "
+                f"{s.outputs} vs {base.outputs}")
         if s.layout is not None:
             raise ValueError("schedule is already fused")
     return dataclasses.replace(
         base, layout=layout,
         algorithm=f"fused[{layout.n}]({base.algorithm})")
+
+
+def unpack_fused_outputs(layout: PayloadLayout, out, n_outputs: int = 1,
+                         *, lead: int = 0):
+    """Unpack a fused execution's result back into per-payload results.
+
+    ``n_outputs`` is ``len(schedule.outputs)`` — it cannot be inferred
+    from ``out``'s type because tuple-leaf payloads (affine) make a
+    single output a tuple too.  Single-output schedules return the
+    list of k unpacked payloads; multi-output schedules (scan_total)
+    return one tuple per payload — payload i gets
+    ``(output0_i, output1_i, ...)``, so a fused scan_total hands every
+    request its own (prefix, total)."""
+    if n_outputs > 1:
+        per_out = [unpack_payloads(layout, o, lead=lead) for o in out]
+        return [tuple(po[i] for po in per_out)
+                for i in range(layout.n)]
+    return unpack_payloads(layout, out, lead=lead)
 
 
 # ---------------------------------------------------------------------------
@@ -948,7 +968,8 @@ class SPMDExecutor(Executor):
         if sched.layout is not None:
             packed = pack_payloads(sched.layout, list(x), xp=jnp)
             out = self._execute(sched, packed, m)
-            return unpack_payloads(sched.layout, out)
+            return unpack_fused_outputs(sched.layout, out,
+                                        len(sched.outputs))
         return self._execute(sched, x, m)
 
     def _execute(self, sched: Schedule, x, m: monoid_lib.Monoid):
@@ -1237,7 +1258,8 @@ class SimulatorExecutor(Executor):
             xs = [jax.tree.map(np.asarray, xi) for xi in x]
             packed = pack_payloads(sched.layout, xs, xp=np, lead=1)
             out = self._execute(sched, packed, m, op, ident_fn)
-            return unpack_payloads(sched.layout, out, lead=1)
+            return unpack_fused_outputs(sched.layout, out,
+                                        len(sched.outputs), lead=1)
         return self._execute(sched, x, m, op, ident_fn)
 
     def _execute(self, sched, x, m, op, ident_fn):

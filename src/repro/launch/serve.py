@@ -22,6 +22,7 @@ import numpy as np
 from repro import configs
 from repro.launch import mesh as mesh_lib
 from repro.models.model import Model
+from repro.serve.metrics import percentile
 
 
 def serve(argv=None):
@@ -34,6 +35,10 @@ def serve(argv=None):
     ap.add_argument("--data-mesh", type=int, default=1)
     ap.add_argument("--model-mesh", type=int, default=1)
     args = ap.parse_args(argv)
+    for name in ("batch", "prompt_len", "gen", "data_mesh", "model_mesh"):
+        if getattr(args, name) < 1:
+            ap.error(f"--{name.replace('_', '-')} must be >= 1, "
+                     f"got {getattr(args, name)}")
 
     get = configs.get_smoke if args.smoke else configs.get
     cfg = get(args.arch)
@@ -59,19 +64,29 @@ def serve(argv=None):
         t_prefill = time.time() - t0
 
         generated = [next_tok]
-        t0 = time.time()
+        step_s = []
         for i in range(G - 1):
+            t0 = time.time()
             logits, cache = decode(params, cache, next_tok[:, None], P + i)
             next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+            jax.block_until_ready(next_tok)
+            step_s.append(time.time() - t0)
             generated.append(next_tok)
-        jax.block_until_ready(next_tok)
-        t_decode = time.time() - t0
+        t_decode = sum(step_s)
 
     out = np.stack([np.asarray(t) for t in generated], axis=1)
-    tok_s = B * (G - 1) / t_decode if t_decode > 0 else float("inf")
     print(f"prefill {P} tokens x {B} reqs: {t_prefill*1e3:.1f} ms")
-    print(f"decode {G-1} steps x {B} reqs: {t_decode*1e3:.1f} ms "
-          f"({tok_s:.1f} tok/s)")
+    if G == 1:
+        # the prompt's last-token argmax IS the only generated token —
+        # there are no decode steps, so no decode rate exists to report
+        print("decode: 0 steps (--gen 1 generates the prefill "
+              "token only)")
+    else:
+        tok_s = B * (G - 1) / t_decode if t_decode > 0 else float("inf")
+        print(f"decode {G-1} steps x {B} reqs: {t_decode*1e3:.1f} ms "
+              f"({tok_s:.1f} tok/s)")
+        print(f"decode step latency: p50 {percentile(step_s, 50)*1e3:.2f} "
+              f"ms, p99 {percentile(step_s, 99)*1e3:.2f} ms")
     print(f"first request tokens: {out[0][:16]}")
     return out
 

@@ -38,7 +38,7 @@ class StragglerWatchdog:
     """EWMA step-time tracker; flags steps slower than ``k`` x EWMA.
 
     On a real cluster the flag feeds the controller's drop-and-rebalance
-    policy (DESIGN.md §9); here it provides the telemetry + hook."""
+    policy (DESIGN.md §10); here it provides the telemetry + hook."""
 
     def __init__(self, alpha: float = 0.1, k: float = 3.0):
         self.alpha = alpha

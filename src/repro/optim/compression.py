@@ -35,6 +35,17 @@ from repro.core.scan_api import ScanSpec, fused_scan
 OFFSETS_SPEC = ScanSpec(kind="exclusive", monoid="add", algorithm="auto")
 
 
+def leaf_slot_counts(sizes, k_fraction: float) -> list[int]:
+    """Per-leaf compact slot counts: the top-k budget each rank
+    contributes to leaf group i is ``max(1, int(sizes[i] *
+    k_fraction))``.  Shared by :func:`sparse_gradient_sync` (the slot
+    math and the offset exscans below) and the serve subsystem's
+    compression request generator (``repro.serve.workloads``), so the
+    traffic the scan service benches is byte-for-byte the traffic this
+    module issues."""
+    return [max(1, int(int(n) * k_fraction)) for n in sizes]
+
+
 def _topk_sparsify(g: jax.Array, k: int):
     """Returns (values, indices, dense_contribution) of the k largest-
     magnitude entries of flat g."""
@@ -69,7 +80,7 @@ def sparse_gradient_sync(
     def one(g, e):
         g = g.astype(jnp.float32) + e
         n = g.size
-        k = max(1, int(n * k_fraction))
+        (k,) = leaf_slot_counts([n], k_fraction)
         vals, idx, mine = _topk_sparsify(g, k)
         new_e = g - mine
         # exchange fixed-size segments
@@ -96,8 +107,8 @@ def sparse_gradient_sync(
     if algorithm is not None:  # legacy string path
         ospec = ospec.over(axis_name, algorithm=algorithm)
     ospec = ospec.over(axis_name, kind="exclusive", monoid="add")
-    counts = [jnp.int32(max(1, int(g.size * k_fraction)))
-              for g in flat_g]
+    counts = [jnp.int32(c) for c in leaf_slot_counts(
+        [g.size for g in flat_g], k_fraction)]
     offs = fused_scan([(c, ospec) for c in counts])
     offsets = jnp.stack(offs)
     return synced, new_err, {"compact_offsets": offsets}

@@ -1,0 +1,29 @@
+"""Continuous-batching scan service (DESIGN.md §8).
+
+The serving story for the paper's latency-dominated small scans:
+live requests are admitted into shape/dtype/monoid buckets, a
+continuous batcher drains each bucket into ONE fused schedule per tick
+(``plan_fused`` decides fuse-vs-serial by the cost model), the plan
+cache is warmed over the declared bucket set at startup so steady
+state never compiles, and a metrics surface reports queue depth, batch
+occupancy, rounds per request and p50/p99 latency.
+``benchmarks/serve_bench.py`` drives it at swept request rates.
+"""
+
+from repro.serve.bucket import Bucket, bucket_key, bucket_of
+from repro.serve.metrics import ServiceMetrics, percentile
+from repro.serve.service import (
+    AdmissionError, ScanRequest, ScanService)
+from repro.serve import workloads
+
+__all__ = [
+    "AdmissionError",
+    "Bucket",
+    "ScanRequest",
+    "ScanService",
+    "ServiceMetrics",
+    "bucket_key",
+    "bucket_of",
+    "percentile",
+    "workloads",
+]

@@ -15,6 +15,14 @@ p; and the plan cache reports hits for repeated ``plan()`` calls.
 import numpy as np
 import pytest
 
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as hst
+except ImportError:  # minimal container: property tests skip
+    from helpers import fake_hypothesis
+
+    given, settings, hst = fake_hypothesis()
+
 from helpers import run_with_devices
 
 from repro.core import monoid as monoid_lib
@@ -229,6 +237,112 @@ def test_fuse_transform_validation():
         fuse([build_123(8), build_butterfly(8)], layout)
     with pytest.raises(ValueError, match="already fused"):
         fuse([fused], layout)
+    # same kind, mismatched output lists refuse to fuse
+    import dataclasses as dc
+
+    from repro.core.schedule import build_scan_total
+
+    st = build_scan_total(8)
+    with pytest.raises(ValueError, match="share outputs"):
+        fuse([st, dc.replace(st, outputs=("$w",))], layout)
+
+
+def _check_fused_bucket(p, xs, dtype, rng):
+    """One bucket's property: k mixed-size payloads of one dtype fuse
+    into the single-scan round count and every unpacked result matches
+    the host exscan."""
+    sim = SimulatorExecutor()
+    spec = ScanSpec(kind="exclusive", monoid="add", algorithm="auto",
+                    axis_name="x")
+    fp = plan_fused([spec] * len(xs), p,
+                    [x[0].nbytes for x in xs])
+    assert fp.fused == (len(xs) > 1), (p, dtype)
+    with collect_stats() as st:
+        outs = fp.execute(xs, executor=sim)
+    for o, x in zip(outs, xs):
+        assert o.dtype == x.dtype
+        if np.issubdtype(x.dtype, np.integer):
+            np.testing.assert_array_equal(o, _exclusive_ref(x))
+        else:  # ⊕ order differs from cumsum's: bit-exact only for ints
+            np.testing.assert_allclose(o, _exclusive_ref(x),
+                                       rtol=1e-12, atol=1e-12)
+    assert st.rounds == fp.rounds, (p, dtype, st.rounds, fp.rounds)
+    res = fp.verify()  # simulator drift check on the same plan
+    assert res["ok"], (p, dtype, res)
+
+
+def test_fused_property_mixed_sizes_and_dtypes_every_p():
+    # deterministic property sweep: p in 2..17, random payload-size
+    # mixes, int64 and float64 buckets (dtype is part of the bucket —
+    # mixed dtypes refuse to pack, asserted at the end)
+    for p in range(2, 18):
+        rng = np.random.default_rng(1000 + p)
+        k = int(rng.integers(1, 6))
+        sizes = [int(rng.integers(1, 32)) for _ in range(k)]
+        ints = [rng.integers(0, 1 << 30, size=(p, n)).astype(np.int64)
+                for n in sizes]
+        _check_fused_bucket(p, ints, np.int64, rng)
+        floats = [rng.standard_normal((p, n)) for n in sizes]
+        _check_fused_bucket(p, floats, np.float64, rng)
+    # a mixed-dtype batch is NOT one bucket: the pack refuses
+    spec = ScanSpec(kind="exclusive", monoid="add", algorithm="auto",
+                    axis_name="x")
+    fp = plan_fused([spec] * 2, 8, [32, 32])
+    bad = [np.zeros((8, 4), np.int64), np.zeros((8, 4), np.float64)]
+    with pytest.raises(ValueError, match="dtype"):
+        fp.execute(bad, executor=SimulatorExecutor())
+
+
+def test_fused_scan_total_multi_output():
+    # k fused scan_totals: ONE packed butterfly, every request gets its
+    # own (prefix, total) back via unpack_fused_outputs
+    from repro.core.schedule import unpack_fused_outputs
+
+    sim = SimulatorExecutor()
+    spec = ScanSpec(kind="scan_total", monoid="add", algorithm="auto",
+                    axis_name="x")
+    for p in (4, 8, 9, 13, 16):
+        rng = np.random.default_rng(p)
+        xs = [rng.integers(0, 1 << 20, size=(p, n)).astype(np.int64)
+              for n in (3, 1, 6)]
+        fp = plan_fused([spec] * len(xs), p,
+                        [x[0].nbytes for x in xs])
+        assert fp.fused, p
+        single = plan(spec, p=p, nbytes=sum(x[0].nbytes for x in xs))
+        assert fp.rounds == single.rounds
+        with collect_stats() as st:
+            outs = fp.execute(xs, executor=sim)
+        for (prefix, total), x in zip(outs, xs):
+            np.testing.assert_array_equal(prefix, _exclusive_ref(x))
+            np.testing.assert_array_equal(
+                total, np.broadcast_to(x.sum(0), x.shape))
+        assert st.rounds == fp.rounds, (p, st.rounds, fp.rounds)
+        assert fp.verify()["ok"], p
+    # unpack_fused_outputs on a plain (single-output) result is just
+    # unpack_payloads
+    xs = [np.arange(6).reshape(2, 3), np.arange(2)]
+    layout = make_layout(xs)
+    packed = pack_payloads(layout, xs, xp=np)
+    outs = unpack_fused_outputs(layout, packed)
+    for o, x in zip(outs, xs):
+        np.testing.assert_array_equal(o, x)
+    # two outputs: payload i gets (out0_i, out1_i)
+    outs = unpack_fused_outputs(layout, (packed, packed), 2)
+    for (a, b), x in zip(outs, xs):
+        np.testing.assert_array_equal(a, x)
+        np.testing.assert_array_equal(b, x)
+
+
+@settings(max_examples=25, deadline=None)
+@given(p=hst.integers(min_value=2, max_value=17),
+       sizes=hst.lists(hst.integers(min_value=1, max_value=16),
+                       min_size=2, max_size=5),
+       seed=hst.integers(min_value=0, max_value=2**31 - 1))
+def test_fused_property_hypothesis(p, sizes, seed):
+    rng = np.random.default_rng(seed)
+    xs = [rng.integers(0, 1 << 30, size=(p, n)).astype(np.int64)
+          for n in sizes]
+    _check_fused_bucket(p, xs, np.int64, rng)
 
 
 # ---------------------------------------------------------------------------

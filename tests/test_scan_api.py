@@ -105,6 +105,33 @@ def test_plan_cache_returns_same_object():
     assert c is not a
 
 
+def test_plan_cache_lru_bounded():
+    from repro.core.scan_api import (
+        PLAN_CACHE_MAXSIZE, plan_cache_info, plan_cache_resize)
+
+    spec = ScanSpec(algorithm="123")
+    try:
+        plan_cache_resize(4)
+        info = plan_cache_info()
+        assert info["maxsize"] == 4 and info["size"] == 0
+        for nbytes in range(8, 8 + 10):
+            plan(spec, p=16, nbytes=nbytes)
+        info = plan_cache_info()
+        assert info["size"] <= 4  # bounded: old entries evicted
+        assert info["misses"] == 10
+        # the most recent entry is still resident…
+        plan(spec, p=16, nbytes=17)
+        assert plan_cache_info()["hits"] == info["hits"] + 1
+        # …and the oldest was evicted, so it misses again
+        plan(spec, p=16, nbytes=8)
+        assert plan_cache_info()["misses"] == 11
+        with pytest.raises(ValueError, match="maxsize"):
+            plan_cache_resize(0)
+    finally:
+        plan_cache_resize()
+    assert plan_cache_info()["maxsize"] == PLAN_CACHE_MAXSIZE
+
+
 def test_multiaxis_plan_rewrites_into_subplans():
     spec = ScanSpec(kind="exclusive", algorithm="123",
                     axis_name=("pod", "data"))

@@ -1,0 +1,332 @@
+"""Scan-service tests (serving subsystem, DESIGN §8).
+
+Covers the serving acceptance criteria: admission control (bad
+payloads, undeclared buckets, queue-depth backpressure), bucketing by
+(kind, monoid, shape, dtype), continuous batching into fused schedules
+with correct per-request results (including multi-output scan_total
+requests), the warmup contract (zero plan-cache misses in steady
+state), admission-to-start deadline semantics, the metrics surface,
+the workload generators wired to the real consumers, and a serve-bench
+burst smoke through the same ``check()`` gate CI runs.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.scan_api import plan_cache_clear, plan_cache_info
+from repro.serve import (
+    AdmissionError, Bucket, ScanService, bucket_key, bucket_of,
+    percentile, workloads)
+
+
+def _exclusive_ref(x):
+    ref = np.zeros_like(x)
+    ref[1:] = np.cumsum(x[:-1], axis=0)
+    return ref
+
+
+def _scalar_buckets():
+    return [Bucket(kind="exclusive", monoid="add", shape=(),
+                   dtype=np.int32, name="scalars")]
+
+
+# ---------------------------------------------------------------------------
+# Buckets
+# ---------------------------------------------------------------------------
+
+
+def test_bucket_key_and_normalization():
+    b = Bucket(kind="exclusive", monoid="add", shape=[4],
+               dtype="int32", name="n")
+    assert b.shape == (4,) and b.key == bucket_key(
+        "exclusive", "add", (4,), np.int32)
+    assert b.nbytes == 16
+    spec = b.spec("x")
+    assert spec.kind == "exclusive" and spec.axis_name == "x"
+    x = np.zeros((8, 4), np.int32)
+    assert bucket_of(x, kind="exclusive", monoid="add").key == b.key
+    b.validate(x, 8)
+    with pytest.raises(ValueError):
+        b.validate(np.zeros((8, 5), np.int32), 8)  # wrong shape
+    with pytest.raises(ValueError):
+        b.validate(np.zeros((7, 4), np.int32), 8)  # wrong p
+    with pytest.raises(ValueError):
+        b.validate(x.astype(np.int64), 8)  # wrong dtype
+
+
+def test_duplicate_buckets_rejected():
+    with pytest.raises(ValueError, match="duplicate"):
+        ScanService(4, _scalar_buckets() + _scalar_buckets())
+
+
+# ---------------------------------------------------------------------------
+# Admission control
+# ---------------------------------------------------------------------------
+
+
+def test_admission_rejects_bad_payload_and_unknown_bucket():
+    svc = ScanService(8, _scalar_buckets())
+    with pytest.raises(AdmissionError) as e:
+        svc.submit(np.zeros((4,), np.int32))  # wrong rank axis
+    assert e.value.reason == "bad_payload"
+    with pytest.raises(AdmissionError) as e:
+        svc.submit(np.zeros((8, 3), np.int32))  # undeclared shape
+    assert e.value.reason == "unknown_bucket"
+    with pytest.raises(AdmissionError) as e:
+        svc.submit(np.zeros((8,), np.float32))  # undeclared dtype
+    assert e.value.reason == "unknown_bucket"
+    assert svc.metrics.rejected_unknown == 3
+    assert svc.metrics.admitted == 0 and svc.depth == 0
+
+
+def test_admission_overload_backpressure():
+    svc = ScanService(4, _scalar_buckets(), max_queue=3)
+    for _ in range(3):
+        svc.submit(np.ones((4,), np.int32))
+    with pytest.raises(AdmissionError) as e:
+        svc.submit(np.ones((4,), np.int32))
+    assert e.value.reason == "overload"
+    assert svc.metrics.rejected_overload == 1
+    svc.drain()  # queue empties -> admission reopens
+    svc.submit(np.ones((4,), np.int32))
+    assert svc.depth == 1
+
+
+def test_admit_unknown_auto_declares():
+    svc = ScanService(4, [], admit_unknown=True)
+    req = svc.submit(np.arange(4, dtype=np.int64))
+    assert req.bucket.key in svc.buckets
+    (done,) = svc.drain()
+    np.testing.assert_array_equal(
+        done.result, _exclusive_ref(np.arange(4, dtype=np.int64)))
+
+
+# ---------------------------------------------------------------------------
+# Continuous batching
+# ---------------------------------------------------------------------------
+
+
+def test_batch_results_match_host_reference_mixed_buckets():
+    buckets = [
+        Bucket(kind="exclusive", monoid="add", shape=(), dtype=np.int32),
+        Bucket(kind="scan_total", monoid="add", shape=(5),
+               dtype=np.int64),
+    ]
+    svc = ScanService(8, buckets, max_batch=4)
+    rng = np.random.default_rng(0)
+    scalars = [rng.integers(0, 100, size=(8,)).astype(np.int32)
+               for _ in range(6)]
+    vectors = [rng.integers(0, 100, size=(8, 5)).astype(np.int64)
+               for _ in range(3)]
+    reqs = [svc.submit(x) for x in scalars]
+    reqs += [svc.submit(x, kind="scan_total") for x in vectors]
+    done = svc.drain()
+    assert len(done) == 9 and all(r.status == "done" for r in reqs)
+    for r, x in zip(reqs[:6], scalars):
+        np.testing.assert_array_equal(r.result, _exclusive_ref(x))
+    for r, x in zip(reqs[6:], vectors):
+        prefix, total = r.result  # scan_total: per-request tuple
+        np.testing.assert_array_equal(prefix, _exclusive_ref(x))
+        np.testing.assert_array_equal(
+            total, np.broadcast_to(x.sum(0), x.shape))
+    m = svc.metrics
+    # 6 scalars at max_batch=4 -> batches of 4+2; vectors -> one of 3
+    assert m.batches == 3 and m.occupancy_sum == 9
+    assert m.fused_round_win > 1.0
+    assert m.completed == 9 and m.rounds_executed > 0
+
+
+def test_single_request_batches_run_solo_not_fused():
+    svc = ScanService(4, _scalar_buckets())
+    svc.submit(np.arange(4, dtype=np.int32))
+    svc.drain()
+    assert svc.metrics.batches == 1
+    assert svc.metrics.fused_batches == 0  # k=1 has nothing to fuse
+    assert svc.metrics.fused_round_win == 1.0
+
+
+def test_tick_round_robin_serves_all_buckets():
+    buckets = [
+        Bucket(kind="exclusive", monoid="add", shape=(), dtype=np.int32,
+               name="a"),
+        Bucket(kind="exclusive", monoid="add", shape=(2,),
+               dtype=np.int32, name="b"),
+    ]
+    svc = ScanService(4, buckets, max_batch=2)
+    for _ in range(2):
+        svc.submit(np.ones((4,), np.int32))
+        svc.submit(np.ones((4, 2), np.int32))
+    finalized = svc.tick()
+    # one tick drains up to max_batch from EVERY bucket queue
+    assert len(finalized) == 4 and svc.depth == 0
+
+
+# ---------------------------------------------------------------------------
+# Warmup contract
+# ---------------------------------------------------------------------------
+
+
+def test_warmup_then_steady_state_never_compiles():
+    plan_cache_clear()
+    svc = ScanService(8, _scalar_buckets(), max_batch=4)
+    assert svc.post_warmup_compiles is None  # not warmed yet
+    info = svc.warmup()
+    assert info["fused_plans_primed"] == 4
+    # every batch size 1..max_batch hits only primed plans
+    rng = np.random.default_rng(1)
+    for k in range(1, 5):
+        for _ in range(k):
+            svc.submit(rng.integers(0, 9, size=(8,)).astype(np.int32))
+        svc.drain()
+    assert svc.post_warmup_compiles == 0
+    # an UNDECLARED shape admitted via admit_unknown does compile —
+    # the contract covers exactly the declared buckets
+    svc.admit_unknown = True
+    svc.submit(np.ones((8, 7), np.int32))
+    svc.drain()
+    assert svc.post_warmup_compiles > 0
+
+
+def test_warmup_primes_cache_not_just_counts():
+    plan_cache_clear()
+    svc = ScanService(8, _scalar_buckets(), max_batch=3)
+    svc.warmup()
+    before = plan_cache_info()
+    svc2 = ScanService(8, _scalar_buckets(), max_batch=3)
+    svc2.warmup()  # same bucket set: pure cache hits
+    after = plan_cache_info()
+    assert after["misses"] == before["misses"]
+    assert after["hits"] > before["hits"]
+
+
+# ---------------------------------------------------------------------------
+# Deadlines
+# ---------------------------------------------------------------------------
+
+
+def test_deadline_admission_to_start_semantics():
+    svc = ScanService(4, _scalar_buckets(), default_timeout=1.0)
+    late = svc.submit(np.ones((4,), np.int32), now=0.0)
+    assert late.deadline == 1.0
+    # its deadline passes while it is still queued -> dropped, never run
+    finalized = svc.tick(now=2.0)
+    assert [r.status for r in finalized] == ["timeout"]
+    assert late.result is None and svc.metrics.timed_out == 1
+    assert late.latency == 2.0
+    # per-request timeout overrides the default; a request whose batch
+    # starts before the deadline completes even if execution crosses it
+    ok = svc.submit(np.ones((4,), np.int32), now=2.0, timeout=1e-9)
+    finalized = svc.tick(now=2.0)  # deadline not yet passed at drain
+    assert ok.status == "done" and finalized == [ok]
+    # explicit absolute deadline wins over default_timeout
+    req = svc.submit(np.ones((4,), np.int32), now=3.0, deadline=100.0)
+    assert req.deadline == 100.0
+
+
+def test_clock_is_monotone_and_measures_service_time():
+    svc = ScanService(4, _scalar_buckets())
+    assert svc.now == 0.0
+    svc.submit(np.ones((4,), np.int32), now=5.0)
+    svc.tick(now=4.0)  # stale caller clock cannot move time backwards
+    assert svc.now > 5.0  # advanced by the measured execution seconds
+    assert svc.metrics.service_seconds > 0.0
+
+
+# ---------------------------------------------------------------------------
+# Metrics
+# ---------------------------------------------------------------------------
+
+
+def test_percentile_and_snapshot():
+    assert np.isnan(percentile([], 50))
+    assert percentile([1.0, None, 3.0], 50) == 2.0
+    svc = ScanService(4, _scalar_buckets())
+    for _ in range(3):
+        svc.submit(np.ones((4,), np.int32), now=0.0)
+    svc.drain()
+    snap = svc.metrics.snapshot()
+    assert snap["completed"] == 3 and snap["queue_depth"] == 0
+    assert snap["latency_p50_s"] > 0.0
+    assert snap["latency_p99_s"] >= snap["latency_p50_s"]
+    assert snap["rounds_per_request"] > 0
+    svc.reset_metrics()
+    assert svc.metrics.snapshot()["completed"] == 0
+
+
+# ---------------------------------------------------------------------------
+# Workload generators (the real consumers' request shapes)
+# ---------------------------------------------------------------------------
+
+
+def test_moe_workload_matches_bucket_and_serves():
+    from repro import configs
+
+    cfg = configs.get_smoke("qwen2_moe_a2_7b")
+    bucket = workloads.moe_bucket(cfg)
+    assert bucket.kind == "scan_total"
+    rng = np.random.default_rng(0)
+    pay = workloads.moe_dispatch_payload(cfg, 4, rng, n_tokens=16)
+    bucket.validate(pay, 4)
+    assert pay.sum() == 4 * 16 * max(cfg.top_k, 1)  # every token routed
+    svc = ScanService(4, [bucket])
+    req = svc.submit(pay, kind="scan_total")
+    svc.drain()
+    prefix, total = req.result
+    np.testing.assert_array_equal(prefix, _exclusive_ref(pay))
+    np.testing.assert_array_equal(
+        total, np.broadcast_to(pay.sum(0), pay.shape))
+
+
+def test_compression_workload_matches_module_counts():
+    from repro.optim.compression import leaf_slot_counts
+
+    sizes = [100, 2_000, 7]
+    pays = workloads.compression_offset_payloads(4, sizes, 0.01)
+    counts = leaf_slot_counts(sizes, 0.01)
+    assert len(pays) == 3
+    bucket = workloads.compression_bucket()
+    for pay, c in zip(pays, counts):
+        bucket.validate(pay, 4)
+        assert (pay == c).all()  # untresholded: uniform counts
+    jittered = workloads.compression_offset_payloads(
+        4, sizes, 0.01, rng=np.random.default_rng(0), thresholded=True)
+    for pay, c in zip(jittered, counts):
+        assert (1 <= pay).all() and (pay <= c).all()
+    with pytest.raises(ValueError, match="rng"):
+        workloads.compression_offset_payloads(4, sizes, thresholded=True)
+
+
+def test_poisson_arrivals():
+    arr = workloads.poisson_arrivals(np.random.default_rng(0), 100.0,
+                                     500)
+    assert len(arr) == 500 and (np.diff(arr) > 0).all()
+    assert 2.0 < arr[-1] < 10.0  # ~5 s of traffic at 100 req/s
+    with pytest.raises(ValueError, match="rate"):
+        workloads.poisson_arrivals(np.random.default_rng(0), 0.0, 1)
+
+
+# ---------------------------------------------------------------------------
+# Serve bench: burst phase through the CI gate
+# ---------------------------------------------------------------------------
+
+
+def test_serve_bench_burst_gate():
+    import importlib.util
+    import os
+
+    path = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "benchmarks", "serve_bench.py")
+    spec = importlib.util.spec_from_file_location("serve_bench", path)
+    sb = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(sb)
+
+    plan_cache_clear()
+    svc, traffic, _ = sb._make_service_and_traffic(seed=0)
+    svc.warmup()
+    rows = [sb.run_burst(svc, traffic)]
+    assert sb.check(rows) == []
+    assert rows[0]["fused_round_win"] >= sb.MIN_FUSED_ROUND_WIN
+    assert rows[0]["post_warmup_compiles"] == 0
+    # a broken burst row trips the gate
+    bad = dict(rows[0], completed=0)
+    assert sb.check([bad])
