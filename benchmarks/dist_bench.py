@@ -1,0 +1,139 @@
+"""Multi-process hierarchical exscan bench: the correctness bridge
+between the distributed runtime (``repro.dist``) and the
+single-process simulator.
+
+Each config plans one two-level exscan over (proc, local), where the
+planner's per-tier cost models pick a DIFFERENT algorithm on the
+intra-process ("ici") tier than on the cross-process ("dci") tier —
+the paper's motivating regime.  The composed schedule is executed
+across a real :class:`~repro.dist.launcher.WorkerPool` (N OS
+processes, socket transport) and checked against
+:class:`~repro.core.schedule.SimulatorExecutor`:
+
+- bit-identity of every output leaf (the runtime's core contract),
+- measured rounds == simulator rounds == plan prediction,
+- measured per-round bytes == ``expected_round_bytes`` (IR byte law),
+- the two tiers chose different algorithms (otherwise the config no
+  longer exercises per-tier choice and must be repinned),
+- cross-process traffic actually flowed (``cross_bytes > 0``).
+
+``--check`` turns any drift into a build failure; results land in
+``BENCH_dist.json`` next to the other ``BENCH_*.json`` artifacts.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+import numpy as np
+
+DEFAULT_JSON = "BENCH_dist.json"
+
+# (nprocs, p_intra, nbytes): pinned where DEFAULT_PROFILE's dci/ici
+# pricing splits the tiers.  Config 1: large-ish m at p=12 -> latency
+# -optimal 123 inside each process, bandwidth-leaning ring (S=2)
+# across processes (p_inter=3 is non-pow-2, exercising the fallback).
+# Config 2: 1 MiB at p=8 -> segmented ring (S=8) inside, 123 across
+# (dci's 10x alpha makes extra cross rounds too expensive).
+CONFIGS = (
+    {"nprocs": 3, "p_intra": 4, "nbytes": 262_144},
+    {"nprocs": 2, "p_intra": 4, "nbytes": 1_048_576},
+)
+
+
+def _payload(p: int, nbytes: int, seed: int) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, 1 << 30,
+                        size=(p, max(1, nbytes // 8))).astype(np.int64)
+
+
+def run_config(cfg: dict, seed: int = 0) -> dict:
+    import jax
+
+    from repro.core import monoid as monoid_lib
+    from repro.core import scan_api
+    from repro.core import schedule as schedule_lib
+    from repro.dist.launcher import WorkerPool, run_plan
+
+    spec = scan_api.ScanSpec(kind="exclusive", monoid="add")
+    pl = scan_api.plan_hierarchical(spec, p_inter=cfg["nprocs"],
+                                    p_intra=cfg["p_intra"],
+                                    nbytes=cfg["nbytes"])
+    inner, outer = pl.sub_plans[0], pl.sub_plans[-1]
+    sched = pl.schedule()
+    x = _payload(pl.p, cfg["nbytes"], seed)
+    m = monoid_lib.get("add")
+
+    with WorkerPool(cfg["nprocs"], cfg["p_intra"]) as pool:
+        res = run_plan(pool, pl, x)
+
+    with schedule_lib.collect_stats() as sim_st:
+        want = schedule_lib.SimulatorExecutor().execute(sched, x, m)
+    identical = all(
+        np.array_equal(g, w) for g, w in
+        zip(jax.tree.leaves(res.outputs), jax.tree.leaves(want)))
+    bytes_expected = schedule_lib.expected_round_bytes(
+        sched, jax.tree.map(lambda a: a[0], x))
+
+    row = {
+        "nprocs": cfg["nprocs"], "p_intra": cfg["p_intra"],
+        "p": pl.p, "nbytes": cfg["nbytes"],
+        "intra_algorithm": inner.algorithm,
+        "intra_segments": inner.segments,
+        "inter_algorithm": outer.algorithm,
+        "inter_segments": outer.segments,
+        "rounds_plan": pl.rounds,
+        "rounds_dist": res.stats["rounds"],
+        "rounds_sim": sim_st.rounds,
+        "ops_dist": res.stats["op_applications"],
+        "ops_sim": sim_st.op_applications,
+        "bytes_dist": sum(res.stats["bytes_per_round"]),
+        "bytes_expected": bytes_expected,
+        "cross_bytes": res.transport["cross_bytes"],
+        "cross_msgs": res.transport["cross_msgs"],
+        "seconds": res.seconds[0],
+        "bit_identical": bool(identical),
+    }
+    row["tiers_diverge"] = inner.algorithm != outer.algorithm
+    row["ok"] = bool(
+        identical
+        and row["rounds_dist"] == row["rounds_sim"] == pl.rounds
+        and row["ops_dist"] == row["ops_sim"]
+        and row["bytes_dist"] == bytes_expected
+        and row["tiers_diverge"]
+        and row["cross_bytes"] > 0)
+    return row
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--check", action="store_true",
+                    help="exit nonzero on any drift (CI gate)")
+    ap.add_argument("--json", nargs="?", const=DEFAULT_JSON,
+                    default=DEFAULT_JSON, metavar="PATH")
+    args = ap.parse_args(argv)
+
+    rows = [run_config(cfg) for cfg in CONFIGS]
+    for r in rows:
+        print(f"p={r['p']} ({r['nprocs']}x{r['p_intra']}) "
+              f"m={r['nbytes']}: intra={r['intra_algorithm']} "
+              f"S={r['intra_segments']} / inter={r['inter_algorithm']} "
+              f"S={r['inter_segments']} rounds={r['rounds_dist']} "
+              f"(plan {r['rounds_plan']}) "
+              f"cross_bytes={r['cross_bytes']} "
+              f"identical={r['bit_identical']} ok={r['ok']}")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"schema_version": 1, "benchmark": "dist",
+                       "rows": rows}, f, indent=1, sort_keys=True)
+        print(f"wrote {args.json}")
+    bad = [r for r in rows if not r["ok"]]
+    if args.check and bad:
+        print(f"DIST DRIFT in {len(bad)} config(s): {bad}")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

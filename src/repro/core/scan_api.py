@@ -827,6 +827,62 @@ def plan(spec: ScanSpec, p: int | tuple | None = None, *,
     return _plan_cached(spec, ps, int(m_bytes), cms)
 
 
+def plan_hierarchical(spec: ScanSpec, *, p_inter: int, p_intra: int,
+                      nbytes: int | None = None, cost_model=None,
+                      inter_axis: str = "proc",
+                      intra_axis: str = "local") -> ScanPlan:
+    """Two-level hierarchical planning: factor p = p_inter × p_intra.
+
+    The multi-process execution model (DESIGN §11): ``p_intra`` ranks
+    live inside each of ``p_inter`` OS processes/hosts, so the intra
+    axis rides the fast "ici" tier while the inter axis crosses the
+    slow "dci" tier.  This re-targets ``spec`` at the
+    ``(inter_axis, intra_axis)`` pair — the standard multi-axis
+    rewrite then composes intra-tier exscan + bridging reduce +
+    inter-tier exscan into ONE axis-annotated schedule
+    (``schedule_lib.compose``) — and routes ``inter_axis`` to the
+    "dci" tier of the pricing profile, so **each tier's algorithm is
+    chosen independently by that tier's cost model** (e.g. doubling
+    intra-host, segmented ring inter-host).  ``plan.explain()`` shows
+    the per-tier runner-up tables, one row set per axis.
+
+    ``cost_model`` defaults to the installed launch-layer profile
+    (``launch.mesh.current_profile()``), which carries the ici/dci
+    tier split; a plain :class:`CostModel` prices both tiers alike
+    (the algorithms may then legitimately coincide).
+    """
+    if p_inter < 1 or p_intra < 1:
+        raise ValueError(f"need p_inter >= 1 and p_intra >= 1, got "
+                         f"{p_inter}/{p_intra}")
+    cm = cost_model
+    if cm is None:
+        cm = current_cost_model()
+        if cm is DEFAULT_COST_MODEL:
+            # nothing installed: the launch layer's tiered profile is
+            # the only default that can tell the two tiers apart
+            from repro.launch import mesh as mesh_lib  # lazy: no cycle
+
+            cm = mesh_lib.current_profile()
+    if isinstance(cm, CostProfile):
+        tier_names = tuple(n for n, _ in cm.tiers)
+        if ("dci" in tier_names
+                and inter_axis not in dict(cm.axis_tiers)):
+            cm = dataclasses.replace(
+                cm, axis_tiers=cm.axis_tiers + ((inter_axis, "dci"),))
+    return plan(spec.over((inter_axis, intra_axis)),
+                (int(p_inter), int(p_intra)), nbytes=nbytes,
+                cost_model=cm)
+
+
+def factor_ranks(p: int, nprocs: int) -> tuple[int, int]:
+    """Split a total rank count into (p_inter, p_intra) for ``nprocs``
+    worker processes; ``nprocs`` must divide ``p``."""
+    if nprocs < 1 or p % nprocs:
+        raise ValueError(
+            f"process count {nprocs} must divide total ranks {p}")
+    return nprocs, p // nprocs
+
+
 def plan_cache_clear():
     _plan_cached.cache_clear()
 

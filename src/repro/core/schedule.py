@@ -506,9 +506,15 @@ def build_scan_total(p: int) -> Schedule:
     single (prefix, total) butterfly — each round exchanges the window
     total T with r^2^k while the lower side folds the received total
     into its exclusive prefix P — computes BOTH in ⌈log₂ p⌉ rounds,
-    the allreduce's round count.  Non-power-of-two p falls back to
-    ``with_total(build_123(p))``: the exscan's rounds plus one local ⊕
-    and a broadcast.  ``outputs = (prefix, total)``."""
+    the allreduce's round count.
+
+    Non-power-of-two p (where the r^2^k pairing no longer closes)
+    reroutes at plan level to an exscan+``with_total`` variant: the
+    cheaper, by (rounds, ⊕), of the 123-doubling and two-⊕-doubling
+    exscans plus one local ⊕ and a broadcast — the 123 variant wins
+    every tie (equal rounds, strictly fewer result-path ⊕), but the
+    reroute keeps the choice explicit rather than assumed.
+    ``outputs = (prefix, total)``."""
     if p >= 2 and not (p & (p - 1)):
         steps = []
         k = 0
@@ -518,7 +524,8 @@ def build_scan_total(p: int) -> Schedule:
             k += 1
         return Schedule("fused_doubling", "scan_total", p, init="x",
                         steps=tuple(steps), outputs=("prefix", "$w"))
-    sched = with_total(build_123(p))
+    sched = min((with_total(build_123(p)), with_total(build_two_op(p))),
+                key=lambda s: (s.rounds, s.op_applications))
     return dataclasses.replace(sched, algorithm="fused_doubling")
 
 

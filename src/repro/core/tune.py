@@ -385,6 +385,96 @@ def local_device_fingerprint() -> str:
 
 
 # ---------------------------------------------------------------------------
+# Cross-process ("dci" tier) calibration through the worker harness
+# ---------------------------------------------------------------------------
+
+DIST_MS = (8192, 131_072, 1_048_576)
+
+
+def dist_fingerprint(nprocs: int, ranks_per_proc: int,
+                     platform: str = "cpu") -> str:
+    """Profile-store key of a multi-process worker topology — distinct
+    from every single-host fingerprint, so cross-process constants
+    never alias a local profile."""
+    return _sanitize(f"dist-{platform}-procs{nprocs}x{ranks_per_proc}")
+
+
+def measure_schedule_dist(pool, sched: "schedule_lib.Schedule",
+                          nbytes: int, *, monoid="add",
+                          repeats: int = 3, seed: int = 0) -> float:
+    """Median walltime of ``sched`` executed across ``pool``'s worker
+    processes (:class:`repro.dist.launcher.WorkerPool`) — the clock
+    that prices real inter-process hops (pickle + loopback TCP), which
+    the simulated clock cannot see."""
+    x = _witness(sched.p, nbytes, seed)
+    res = pool.run(sched, x, monoid=monoid, collect=False,
+                   repeats=repeats)
+    return float(np.median(res.seconds))
+
+
+def calibration_sweep_dist(pool, *, ms=DIST_MS, monoid="add",
+                           repeats: int = 3,
+                           tier: str = "dci") -> list[Sample]:
+    """Time every registered exclusive algorithm (+ the allreduce
+    butterfly) across the worker pool at its fixed p; the rows feed
+    :func:`fit_tier` for the cross-process tier."""
+    mono = monoid_lib.get(monoid)
+    op_cost = getattr(mono, "op_cost", 1.0)
+    samples = []
+    for kind, name, _, m, S in _sweep_cases((pool.p,), ms):
+        sched = scan_api.get_algorithm(kind, name).schedule(pool.p, S)
+        feats = schedule_features(sched, m, op_cost,
+                                  commutative=mono.commutative)
+        seconds = measure_schedule_dist(pool, sched, m, monoid=monoid,
+                                        repeats=repeats)
+        samples.append(Sample(
+            tier=tier, kind=kind, algorithm=name, p=pool.p, nbytes=m,
+            segments=S, hops=feats[0], serial_bytes=feats[1],
+            op_bytes=feats[2], seconds=seconds, clock="dist"))
+    return samples
+
+
+def calibrate_dist(pool=None, *, nprocs: int = 2,
+                   ranks_per_proc: int = 1, ms=DIST_MS, monoid="add",
+                   repeats: int = 3,
+                   base: CostProfile | None = None) -> CostProfile:
+    """Fit the "dci" tier from schedules timed across real worker
+    processes; the "ici" tier is carried over from ``base`` (default:
+    the launch-layer profile), since intra-process rounds never cross
+    the harness.  The profile's ``mesh_fingerprint`` encodes the
+    process topology (:func:`dist_fingerprint`), so multi-process
+    constants never collide with single-host profiles in the store,
+    and ``axis_tiers`` routes the "proc" axis to the fitted tier."""
+    if base is None:
+        from repro.launch import mesh as mesh_lib  # lazy: no cycle
+
+        base = mesh_lib.DEFAULT_PROFILE
+    own_pool = pool is None
+    if own_pool:
+        from repro.dist.launcher import WorkerPool
+
+        pool = WorkerPool(nprocs, ranks_per_proc)
+    try:
+        samples = calibration_sweep_dist(pool, ms=ms, monoid=monoid,
+                                         repeats=repeats)
+        dci, resid = fit_tier(samples)
+        fp = dist_fingerprint(pool.nprocs, pool.p_intra)
+    finally:
+        if own_pool:
+            pool.close()
+    try:
+        ici = base.model("ici")
+    except KeyError:
+        ici = base.model(base.default_tier)
+    routing = dict(base.axis_tiers)
+    routing["proc"] = "dci"
+    return CostProfile(
+        tiers=(("dci", dci), ("ici", ici)), source="calibrated",
+        mesh_fingerprint=fp, axis_tiers=tuple(sorted(routing.items())),
+        default_tier="ici", residuals=(("dci", resid),))
+
+
+# ---------------------------------------------------------------------------
 # Profile store: JSON keyed by mesh fingerprint, schema-versioned
 # ---------------------------------------------------------------------------
 
@@ -425,17 +515,27 @@ def load_profile_file(path: str) -> CostProfile:
         return CostProfile.from_json(json.load(f))
 
 
+# Anything a corrupted, truncated, or wrong-shaped profile file can
+# throw while parsing: syntax errors (JSONDecodeError is a ValueError
+# subclass), missing keys, and structurally wrong values ("tiers" a
+# string/list instead of a mapping raises AttributeError/TypeError).
+# A broken store entry must degrade to defaults, never crash planning.
+_LOAD_ERRORS = (ValueError, KeyError, TypeError, AttributeError,
+                OSError)
+
+
 def load_profile(mesh_fingerprint: str,
                  directory: str | None = None) -> CostProfile | None:
     """The persisted profile for a mesh fingerprint, or None when
-    missing or written under an incompatible schema version (callers
-    fall back to defaults — an old profile never poisons planning)."""
+    missing, unreadable, corrupted, or written under an incompatible
+    schema version (callers fall back to defaults — a broken profile
+    never poisons planning)."""
     path = profile_path(mesh_fingerprint, directory)
     if not os.path.exists(path):
         return None
     try:
         return load_profile_file(path)
-    except (ValueError, KeyError, json.JSONDecodeError):
+    except _LOAD_ERRORS:
         return None
 
 
@@ -452,7 +552,7 @@ def latest_profile(directory: str | None = None) -> CostProfile | None:
     for path in paths:
         try:
             return load_profile_file(path)
-        except (ValueError, KeyError, json.JSONDecodeError):
+        except _LOAD_ERRORS:
             continue
     return None
 
@@ -485,11 +585,34 @@ def main(argv=None) -> int:
     ap.add_argument("--max-residual", type=float, default=0.05,
                     help="fail if any tier's relative fit residual "
                          "exceeds this (decision-boundary guard)")
+    ap.add_argument("--dist", type=int, default=0, metavar="NPROCS",
+                    help="fit the 'dci' tier from schedules timed "
+                         "across NPROCS worker processes (the "
+                         "multi-process harness) instead of the "
+                         "local sweep")
+    ap.add_argument("--dist-intra", type=int, default=1,
+                    help="ranks per worker process for --dist")
     args = ap.parse_args(argv)
 
     from repro.launch import mesh as mesh_lib
 
     truth = mesh_lib.DEFAULT_PROFILE
+    if args.dist:
+        profile = calibrate_dist(nprocs=args.dist,
+                                 ranks_per_proc=args.dist_intra)
+        residuals = dict(profile.residuals)
+        print(f"calibrated profile (clock=dist, "
+              f"mesh={profile.mesh_fingerprint}, "
+              f"fingerprint={profile.fingerprint()}):")
+        for tier, cm in profile.tiers:
+            print(f"  {tier}: alpha={cm.alpha:.3e} beta={cm.beta:.3e} "
+                  f"gamma={cm.gamma:.3e} "
+                  f"residual={residuals.get(tier, 0.0):.3e}")
+        path = save_profile(profile, args.out)
+        print(f"wrote {path}")
+        # no residual gate: real IPC timings carry serialization
+        # overheads the linear model absorbs as noise by design
+        return 0
     profile = calibrate(simulate=args.simulate, truth=truth,
                         ps=args.ps, ms=args.ms,
                         mesh_fingerprint=args.fingerprint)

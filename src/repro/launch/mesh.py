@@ -62,13 +62,30 @@ def axis_cost_model(axis_name) -> CostModel:
     return current_profile().for_axis(axis_name)
 
 
-def mesh_fingerprint(mesh) -> str:
+def mesh_fingerprint(mesh, *, processes: int | None = None,
+                     local_devices: int | None = None) -> str:
     """Identity of a mesh for the calibrated-profile store: platform,
-    device kind and the axis-name/size grid."""
+    device kind, the axis-name/size grid, and — for multi-process
+    runtimes — the process topology.
+
+    A profile fitted across N processes prices real inter-process
+    hops; resolving it for a single-process mesh (or vice versa)
+    would poison planning, so the fingerprint folds in the process
+    count and per-process device shape whenever more than one process
+    participates.  Single-process fingerprints are unchanged
+    (``processes`` defaults to ``jax.process_count()``), so existing
+    stored profiles stay resolvable."""
     dev = mesh.devices.flat[0]
     kind = getattr(dev, "device_kind", "unknown")
     grid = "x".join(f"{a}{mesh.shape[a]}" for a in mesh.axis_names)
-    return f"{getattr(dev, 'platform', 'unknown')}-{kind}-{grid}"
+    base = f"{getattr(dev, 'platform', 'unknown')}-{kind}-{grid}"
+    if processes is None:
+        processes = jax.process_count()
+    if int(processes) > 1:
+        if local_devices is None:
+            local_devices = jax.local_device_count()
+        base += f"-procs{int(processes)}x{int(local_devices)}"
+    return base
 
 
 def resolve_profile(mesh=None, directory: str | None = None,

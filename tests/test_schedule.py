@@ -405,3 +405,87 @@ def test_legacy_wrappers_emit_deprecation_warning():
         with pytest.warns(DeprecationWarning, match="ScanSpec"):
             shard_map(fn, mesh=mesh, in_specs=P("x"),
                       out_specs=P("x"))(x)
+
+
+# ---------------------------------------------------------------------------
+# Non-power-of-two fallbacks (satellite): build_scan_total and the
+# butterfly must degrade gracefully — correct results, explicit round
+# structure, and plan/measurement agreement — at every awkward p.
+# ---------------------------------------------------------------------------
+
+NON_POW2_PS = (3, 5, 6, 7, 12)
+
+
+@pytest.mark.parametrize("p", NON_POW2_PS)
+def test_scan_total_non_pow2_fallback(p):
+    """At non-pow-2 p the fused butterfly pairing doesn't close;
+    build_scan_total reroutes to exscan+with_total and must still
+    produce (exclusive prefix, total) — for a NON-commutative monoid
+    too — with the (rounds, ⊕)-minimal doubling underneath."""
+    sched = schedule_lib.build_scan_total(p)
+    assert sched.kind == "scan_total"
+    assert sched.algorithm == "fused_doubling"
+    assert sched.outputs == ("prefix", "$w")
+    # the reroute picked the cheaper doubling: never worse than either
+    candidate = min(
+        (schedule_lib.with_total(build_123(p)),
+         schedule_lib.with_total(schedule_lib.build_two_op(p))),
+        key=lambda s: (s.rounds, s.op_applications))
+    assert (sched.rounds, sched.op_applications) == \
+        (candidate.rounds, candidate.op_applications)
+    x = np.arange(p * 4, dtype=np.int64).reshape(p, 4) ** 2
+    prefix, total = SimulatorExecutor().execute(sched, x,
+                                                monoid_lib.ADD)
+    assert np.array_equal(prefix, _exclusive_ref(x))
+    assert np.array_equal(total, np.broadcast_to(x.sum(0), x.shape))
+    # non-commutative: affine composition order must survive the
+    # fallback's shift/bcast structure
+    m = monoid_lib.get("affine")
+    rng = np.random.default_rng(p)
+    ax = (rng.standard_normal((p, 4)), rng.standard_normal((p, 4)))
+    prefix, total = SimulatorExecutor().execute(sched, ax, m)
+    want_a = np.ones_like(ax[0])
+    want_b = np.zeros_like(ax[1])
+    for r in range(p):
+        assert np.allclose(prefix[0][r], want_a)
+        assert np.allclose(prefix[1][r], want_b)
+        want_b = ax[1][r] + ax[0][r] * want_b
+        want_a = want_a * ax[0][r]
+    assert np.allclose(total[0], np.broadcast_to(want_a, ax[0].shape))
+    assert np.allclose(total[1], np.broadcast_to(want_b, ax[1].shape))
+
+
+@pytest.mark.parametrize("p", NON_POW2_PS)
+def test_butterfly_non_pow2_fallback(p):
+    """Non-pow-2 butterfly = inclusive scan + bcast of the last rank:
+    order-preserving (non-commutative safe), correct, and its round
+    count is the inclusive scan's plus the broadcast."""
+    sched = schedule_lib.build_butterfly(p)
+    incl_rounds = schedule_lib.build_hillis_steele(p).rounds
+    assert sched.rounds == incl_rounds  # bcast is not a priced round
+    x = np.arange(p * 4, dtype=np.int64).reshape(p, 4) + 1
+    got = SimulatorExecutor().execute(sched, x, monoid_lib.ADD)
+    assert np.array_equal(got, np.broadcast_to(x.sum(0), x.shape))
+    m = monoid_lib.get("matmul")
+    rng = np.random.default_rng(p)
+    mats = rng.standard_normal((p, 3, 3))
+    got = SimulatorExecutor().execute(sched, mats, m)
+    # repo convention: op(lo, hi) = hi @ lo, so the rank-ordered
+    # reduction is mats[p-1] @ ... @ mats[0]
+    want = mats[0]
+    for r in range(1, p):
+        want = mats[r] @ want
+    for r in range(p):
+        assert np.allclose(got[r], want)
+
+
+@pytest.mark.parametrize("p", NON_POW2_PS)
+def test_non_pow2_plans_verify_drift_free(p):
+    """The planner path over the fallbacks: predicted rounds/⊕/bytes
+    must match the simulator-executed schedule exactly."""
+    for kind, alg in (("scan_total", "fused_doubling"),
+                      ("allreduce", "butterfly")):
+        pl = plan(ScanSpec(kind=kind, algorithm=alg, monoid="add"),
+                  p, nbytes=64)
+        res = schedule_lib.verify_plan(pl)
+        assert res["ok"], (kind, p, res)

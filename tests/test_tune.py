@@ -194,6 +194,61 @@ def test_profile_schema_version_gate(tmp_path):
     assert tune.load_profile("m", str(tmp_path)) is None
 
 
+def _store_file(tmp_path, fingerprint, text: str) -> str:
+    path = tune.profile_path(fingerprint, str(tmp_path))
+    import os
+
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        f.write(text)
+    return path
+
+
+@pytest.mark.parametrize("text", [
+    "{not json at all",                          # syntax error
+    "",                                          # empty file
+    '{"schema_version": 1}',                     # missing every field
+    '{"schema_version": 1, "tiers": "oops"}',    # tiers wrong type
+    '{"schema_version": 1, "tiers": [["ici", 3]]}',  # model not a dict
+    '{"schema_version": "one", "tiers": {}}',    # version wrong type
+], ids=["syntax", "empty", "missing", "tiers-str", "model-int",
+        "version-str"])
+def test_load_profile_corrupted_store_returns_none(tmp_path, text):
+    """A broken store entry degrades to None (caller falls back to
+    defaults) — NEVER an exception escaping into planning."""
+    _store_file(tmp_path, "broken", text)
+    assert tune.load_profile("broken", str(tmp_path)) is None
+
+
+def test_load_profile_truncated_after_save_returns_none(tmp_path):
+    prof = _profile(mesh_fingerprint="trunc")
+    path = tune.save_profile(prof, str(tmp_path))
+    body = open(path).read()
+    with open(path, "w") as f:
+        f.write(body[:len(body) // 2])  # torn write / partial copy
+    assert tune.load_profile("trunc", str(tmp_path)) is None
+
+
+def test_latest_profile_skips_corrupted_entries(tmp_path):
+    import os
+    import time
+
+    good = _profile(mesh_fingerprint="good")
+    tune.save_profile(good, str(tmp_path))
+    bad = _store_file(tmp_path, "newer-but-broken", "{garbage")
+    # make the broken entry strictly newest by mtime
+    future = time.time() + 60
+    os.utime(bad, (future, future))
+    assert tune.latest_profile(str(tmp_path)) == good
+
+
+def test_resolve_profile_survives_corrupted_store(tmp_path):
+    _store_file(tmp_path, "cpu-x", "{garbage")
+    assert mesh_lib.resolve_profile(
+        fingerprint="cpu-x", directory=str(tmp_path)) is \
+        mesh_lib.DEFAULT_PROFILE
+
+
 def test_resolve_profile_prefers_calibrated_then_defaults(tmp_path):
     assert mesh_lib.resolve_profile(
         fingerprint="nope", directory=str(tmp_path)) is \
@@ -437,3 +492,58 @@ def test_cli_simulate_persists_profile_and_reports_residual(tmp_path):
     assert pl.cost_model_source == "calibrated"
     assert {r["algorithm"] for r in pl.explain()} == \
         set(scan_api.algorithms("exclusive"))
+
+
+# ---------------------------------------------------------------------------
+# Process-topology fingerprints (satellite): multi-process profiles
+# must never key-collide with single-host ones in the store.
+# ---------------------------------------------------------------------------
+
+
+def test_mesh_fingerprint_folds_in_process_topology(monkeypatch):
+    import jax
+
+    mesh = mesh_lib.make_host_mesh(1, 1)
+    single = mesh_lib.mesh_fingerprint(mesh)
+    # single-process fingerprints are UNCHANGED (existing stored
+    # profiles stay resolvable after this extension)
+    assert "procs" not in single
+    assert single == mesh_lib.mesh_fingerprint(mesh, processes=1)
+    multi = mesh_lib.mesh_fingerprint(mesh, processes=4,
+                                      local_devices=2)
+    assert multi == single + "-procs4x2"
+    assert multi != mesh_lib.mesh_fingerprint(mesh, processes=2,
+                                              local_devices=4)
+    # defaults come from the jax runtime
+    monkeypatch.setattr(jax, "process_count", lambda: 3)
+    monkeypatch.setattr(jax, "local_device_count", lambda: 5)
+    assert mesh_lib.mesh_fingerprint(mesh) == single + "-procs3x5"
+
+
+def test_process_topology_keys_profile_store(tmp_path, monkeypatch):
+    """The cache-keying regression: a profile calibrated across N
+    processes resolves ONLY under the N-process fingerprint — a
+    single-process planner never silently prices with cross-process
+    constants (and vice versa)."""
+    import jax
+
+    mesh = mesh_lib.make_host_mesh(1, 1)
+    multi_fp = mesh_lib.mesh_fingerprint(mesh, processes=2,
+                                         local_devices=1)
+    dist_prof = _profile(alpha=9e-5, mesh_fingerprint=multi_fp,
+                         tier="dci")
+    tune.save_profile(dist_prof, str(tmp_path))
+    # single-process resolution falls through to defaults...
+    monkeypatch.setattr(jax, "process_count", lambda: 1)
+    assert mesh_lib.resolve_profile(
+        mesh, directory=str(tmp_path)) is mesh_lib.DEFAULT_PROFILE
+    # ...while the matching process topology finds the profile
+    monkeypatch.setattr(jax, "process_count", lambda: 2)
+    monkeypatch.setattr(jax, "local_device_count", lambda: 1)
+    assert mesh_lib.resolve_profile(
+        mesh, directory=str(tmp_path)) == dist_prof
+
+
+def test_dist_fingerprint_shape():
+    assert tune.dist_fingerprint(2, 4) == "dist-cpu-procs2x4"
+    assert tune.dist_fingerprint(2, 4) != tune.dist_fingerprint(4, 2)
