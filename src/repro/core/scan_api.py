@@ -877,7 +877,9 @@ def plan_hierarchical(spec: ScanSpec, *, p_inter: int, p_intra: int,
 def factor_ranks(p: int, nprocs: int) -> tuple[int, int]:
     """Split a total rank count into (p_inter, p_intra) for ``nprocs``
     worker processes; ``nprocs`` must divide ``p``."""
-    if nprocs < 1 or p % nprocs:
+    if nprocs < 1:
+        raise ValueError(f"need nprocs >= 1, got {nprocs}")
+    if p % nprocs:
         raise ValueError(
             f"process count {nprocs} must divide total ranks {p}")
     return nprocs, p // nprocs

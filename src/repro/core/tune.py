@@ -458,7 +458,8 @@ def calibrate_dist(pool=None, *, nprocs: int = 2,
         samples = calibration_sweep_dist(pool, ms=ms, monoid=monoid,
                                          repeats=repeats)
         dci, resid = fit_tier(samples)
-        fp = dist_fingerprint(pool.nprocs, pool.p_intra)
+        fp = dist_fingerprint(pool.nprocs, pool.p_intra,
+                              getattr(pool, "platform", "cpu"))
     finally:
         if own_pool:
             pool.close()

@@ -1,0 +1,42 @@
+"""Multi-process distributed execution of scan schedules (DESIGN §11).
+
+The rest of the repo plans, composes and verifies schedules inside one
+process; this package makes a :class:`~repro.core.schedule.Schedule`
+run across **real OS process boundaries**:
+
+  * :mod:`repro.dist.transport` — rank-addressed message transports:
+    an in-process :class:`LocalTransport` (threads; unit tests) and a
+    :class:`SocketTransport` whose workers rendezvous through a
+    coordinator address — ``jax.distributed.initialize``-style — and
+    then exchange schedule payloads over direct loopback TCP peer
+    connections, so the harness never needs real NICs.
+  * :mod:`repro.dist.worker` — the per-rank message-passing executor
+    (:class:`RankExecutor`): one schedule rank's side of the IR —
+    sends/receives honouring each round's peer structure — plus the
+    worker process main loop.
+  * :mod:`repro.dist.launcher` — :class:`WorkerPool` spawns N worker
+    subprocesses, scatters payloads, gathers stacked results, and the
+    ``python -m repro.dist.launcher --nprocs 2 --smoke`` CLI.
+
+The correctness contract is *bit-identity*: executing a schedule
+through N processes must equal the single-process
+:class:`~repro.core.schedule.SimulatorExecutor` on the same schedule,
+bit for bit (both follow the IR with the same numpy ops in the same
+order).  ``benchmarks/dist_bench.py --check`` gates it in CI.
+"""
+
+from repro.dist.launcher import WorkerPool, run_plan
+from repro.dist.transport import (
+    LocalTransport, SocketTransport, Transport, TransportError)
+from repro.dist.worker import RankExecutor, run_ranks_threaded
+
+__all__ = [
+    "LocalTransport",
+    "RankExecutor",
+    "SocketTransport",
+    "Transport",
+    "TransportError",
+    "WorkerPool",
+    "run_plan",
+    "run_ranks_threaded",
+]

@@ -1,0 +1,317 @@
+"""Spawn and drive N worker processes executing one schedule.
+
+:class:`WorkerPool` is the coordinator: it binds a loopback rendezvous
+socket, spawns ``nprocs`` subprocess workers (``python -m
+repro.dist.worker`` with the coordinator address in the environment —
+the ``jax.distributed.initialize`` shape), hands them the run
+configuration, then scatters per-rank payloads / gathers stacked
+results over the per-worker control connections.  Process k owns the
+contiguous global-rank block ``[k·p_intra, (k+1)·p_intra)`` — the
+row-major layout of a composed ``(inter_axis, intra_axis)`` schedule,
+so intra-tier rounds stay inside one process while inter-tier rounds
+cross process boundaries.
+
+CLI smoke (the CI two-process gate)::
+
+    PYTHONPATH=src python -m repro.dist.launcher --nprocs 2 --smoke
+
+plans a hierarchical exscan over (proc=2, local=p_intra), executes it
+across the worker pool, and verifies bit-identity against the
+single-process :class:`~repro.core.schedule.SimulatorExecutor`.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import os
+import socket
+import subprocess
+import sys
+import tempfile
+import time
+
+import numpy as np
+
+from repro.dist import transport as transport_lib
+
+_SRC_DIR = os.path.dirname(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))))
+
+
+@dataclasses.dataclass
+class DistResult:
+    """One distributed run: stacked outputs + measurement."""
+
+    outputs: object  # leading-rank-axis pytree (tuple if multi-output)
+    seconds: list  # per repeat: max worker walltime
+    stats: dict | None  # rank-0 CollectiveStats aggregate (collect=True)
+    transport: dict  # summed transport counters (cross_* prove IPC)
+
+
+class WorkerPool:
+    """N subprocess workers executing schedules across real OS
+    process boundaries, each owning ``p_intra`` consecutive ranks."""
+
+    def __init__(self, nprocs: int, p_intra: int = 1, *,
+                 timeout: float = 120.0):
+        if nprocs < 1 or p_intra < 1:
+            raise ValueError(f"need nprocs >= 1 and p_intra >= 1, got "
+                             f"{nprocs}/{p_intra}")
+        self.nprocs = int(nprocs)
+        self.p_intra = int(p_intra)
+        self.timeout = timeout
+        self._closed = False
+        self._listener = socket.socket(socket.AF_INET,
+                                       socket.SOCK_STREAM)
+        self._listener.bind(("127.0.0.1", 0))
+        self._listener.listen(nprocs)
+        port = self._listener.getsockname()[1]
+        self._logs = [tempfile.NamedTemporaryFile(
+            mode="w+", prefix=f"repro-dist-w{k}-", suffix=".log",
+            delete=False) for k in range(nprocs)]
+        env = dict(os.environ)
+        env["PYTHONPATH"] = _SRC_DIR + os.pathsep + \
+            env.get("PYTHONPATH", "")
+        env.setdefault("JAX_PLATFORMS", "cpu")
+        # first entry of the platform list the workers boot with —
+        # keys calibrated profiles so backends never alias in the store
+        self.platform = env["JAX_PLATFORMS"].split(",")[0].strip()
+        env["REPRO_DIST_COORD"] = f"127.0.0.1:{port}"
+        env["REPRO_DIST_NPROCS"] = str(nprocs)
+        env["REPRO_DIST_TIMEOUT"] = str(timeout)
+        self._procs = []
+        for k in range(nprocs):
+            wenv = dict(env, REPRO_DIST_PROC=str(k))
+            self._procs.append(subprocess.Popen(
+                [sys.executable, "-m", "repro.dist.worker"], env=wenv,
+                stdout=self._logs[k], stderr=subprocess.STDOUT))
+        try:
+            # workers connect in arbitrary order: index the control
+            # connections by process id so task k reaches process k
+            self._conns = dict(sorted(
+                transport_lib.rendezvous_coordinator(
+                    self._listener, nprocs,
+                    {"ranks_per_proc": self.p_intra,
+                     "timeout": timeout},
+                    timeout=timeout).items()))
+        except Exception as e:
+            raise RuntimeError(
+                f"worker rendezvous failed: {e}\n"
+                f"{self._drain_logs()}") from e
+
+    @property
+    def p(self) -> int:
+        """Total schedule ranks the pool executes."""
+        return self.nprocs * self.p_intra
+
+    def _drain_logs(self) -> str:
+        chunks = []
+        for k, f in enumerate(self._logs):
+            try:
+                f.flush()
+                with open(f.name) as rf:
+                    text = rf.read().strip()
+                if text:
+                    chunks.append(f"--- worker {k} ---\n{text}")
+            except OSError:
+                pass
+        return "\n".join(chunks)
+
+    def _request(self, messages: list[tuple]) -> list[dict]:
+        """Send one task per worker, await one reply per worker."""
+        for conn, msg in zip(self._conns.values(), messages):
+            transport_lib.send_msg(conn, msg)
+        replies, errors = [], []
+        for k, conn in self._conns.items():
+            conn.settimeout(self.timeout)
+            try:
+                tag, body = transport_lib.recv_msg(conn)
+            except (OSError, transport_lib.TransportError) as e:
+                raise RuntimeError(
+                    f"worker {k} died: {e}\n"
+                    f"{self._drain_logs()}") from e
+            if tag == "error":
+                errors.append((k, body))
+            else:
+                replies.append(body)
+        if errors:
+            # every worker's reply was consumed above, so the control
+            # connections stay usable after a failed task
+            k, body = errors[0]
+            raise RuntimeError(f"worker {k} failed:\n{body}")
+        return replies
+
+    def run(self, sched, x, monoid="add", *, collect: bool = True,
+            repeats: int = 1) -> DistResult:
+        """Execute ``sched`` on pytree ``x`` (leading rank axis of
+        size ``self.p``) across the worker processes; returns stacked
+        outputs exactly like the single-process simulator."""
+        import jax
+
+        if sched.p != self.p:
+            raise ValueError(f"schedule p={sched.p} != pool "
+                             f"p={self.p} ({self.nprocs}x{self.p_intra})")
+        per_rank = [jax.tree.map(lambda a: np.asarray(a)[r], x)
+                    for r in range(self.p)]
+        msgs = []
+        for k in range(self.nprocs):
+            block = per_rank[k * self.p_intra:(k + 1) * self.p_intra]
+            msgs.append(("run", {
+                "schedule": sched, "monoid": monoid, "xs": block,
+                "collect": collect and k == 0, "repeats": repeats}))
+        replies = self._request(msgs)
+        outs = [o for r in replies for o in r["outputs"]]
+        n_out = len(sched.outputs)
+        if n_out > 1:
+            stacked = tuple(
+                jax.tree.map(lambda *vs: np.stack(vs, axis=0),
+                             *[o[j] for o in outs])
+                for j in range(n_out))
+        else:
+            stacked = jax.tree.map(lambda *vs: np.stack(vs, axis=0),
+                                   *outs)
+        seconds = [max(r["seconds"][i] for r in replies)
+                   for i in range(repeats)]
+        tstats: dict = {}
+        for r in replies:
+            for key, v in r["transport"].items():
+                tstats[key] = tstats.get(key, 0) + v
+        return DistResult(outputs=stacked, seconds=seconds,
+                          stats=replies[0]["stats"], transport=tstats)
+
+    def measure_hop(self, nbytes: int, *, repeats: int = 10) -> float:
+        """Median-free one-way cross-process hop estimate: half the
+        mean round-trip of ``repeats`` ping-pongs between process 0
+        and process 1 at ``nbytes`` payload."""
+        if self.nprocs < 2:
+            raise ValueError("measure_hop needs >= 2 worker processes")
+        msgs = [("pingpong", {"peer_proc": 1, "nbytes": nbytes,
+                              "repeats": repeats, "lead": True}),
+                ("pingpong", {"peer_proc": 0, "nbytes": nbytes,
+                              "repeats": repeats, "lead": False})]
+        msgs += [("pingpong", {"peer_proc": k, "nbytes": 0,
+                               "repeats": 0, "lead": True})
+                 for k in range(2, self.nprocs)]
+        replies = self._request(msgs)
+        return replies[0]["seconds"] / (2 * repeats)
+
+    def close(self):
+        if self._closed:
+            return
+        self._closed = True
+        for conn in self._conns.values():
+            try:
+                transport_lib.send_msg(conn, ("shutdown", None))
+            except OSError:
+                pass
+        deadline = time.monotonic() + 10.0
+        for proc in self._procs:
+            try:
+                proc.wait(timeout=max(0.1,
+                                      deadline - time.monotonic()))
+            except subprocess.TimeoutExpired:
+                proc.kill()
+        for conn in self._conns.values():
+            conn.close()
+        self._listener.close()
+        for f in self._logs:
+            try:
+                f.close()
+                os.unlink(f.name)
+            except OSError:
+                pass
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+
+def run_plan(pool: WorkerPool, pl, x, *, collect: bool = True,
+             repeats: int = 1) -> DistResult:
+    """Execute a resolved :class:`~repro.core.scan_api.ScanPlan`
+    through ``pool`` (the plan's spec names the monoid)."""
+    from repro.core import monoid as monoid_lib
+
+    name = monoid_lib.get(pl.spec.monoid).name
+    return pool.run(pl.schedule(), x, monoid=name, collect=collect,
+                    repeats=repeats)
+
+
+# ---------------------------------------------------------------------------
+# CLI: the two-process smoke the CI job runs
+# ---------------------------------------------------------------------------
+
+
+def _smoke_payload(p: int, nbytes: int, seed: int = 0) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, 1 << 30,
+                        size=(p, max(1, nbytes // 8))).astype(np.int64)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="Run a hierarchical exscan across N worker "
+                    "processes and verify it against the simulator.")
+    ap.add_argument("--nprocs", type=int, default=2,
+                    help="worker processes (the inter/'dci' tier size)")
+    ap.add_argument("--p-intra", type=int, default=4,
+                    help="ranks per process (the intra/'ici' tier size)")
+    ap.add_argument("--m", type=int, default=1_048_576,
+                    help="per-rank payload bytes")
+    ap.add_argument("--monoid", default="add")
+    ap.add_argument("--smoke", action="store_true",
+                    help="exit nonzero unless the multi-process result "
+                         "is bit-identical to the simulator")
+    ap.add_argument("--timeout", type=float, default=120.0)
+    args = ap.parse_args(argv)
+
+    from repro.core import monoid as monoid_lib
+    from repro.core import scan_api
+    from repro.core import schedule as schedule_lib
+
+    spec = scan_api.ScanSpec(kind="exclusive", monoid=args.monoid)
+    pl = scan_api.plan_hierarchical(spec, p_inter=args.nprocs,
+                                    p_intra=args.p_intra,
+                                    nbytes=args.m)
+    sched = pl.schedule()
+    inner, _, outer = pl.sub_plans if len(pl.sub_plans) == 3 \
+        else (pl.sub_plans[0], None, pl.sub_plans[-1])
+    print(f"hierarchical plan p={pl.p} "
+          f"({args.nprocs} procs x {args.p_intra} ranks), "
+          f"m={args.m}B:")
+    print(f"  intra ('{inner.spec.axes[-1]}' tier): "
+          f"{inner.algorithm} S={inner.segments} "
+          f"rounds={inner.rounds}")
+    print(f"  inter ('{outer.spec.axes[-1]}' tier): "
+          f"{outer.algorithm} S={outer.segments} "
+          f"rounds={outer.rounds}")
+    x = _smoke_payload(pl.p, args.m)
+    m = monoid_lib.get(args.monoid)
+    with WorkerPool(args.nprocs, args.p_intra,
+                    timeout=args.timeout) as pool:
+        res = pool.run(sched, x, monoid=m.name)
+    with schedule_lib.collect_stats() as st:
+        want = schedule_lib.SimulatorExecutor().execute(sched, x, m)
+    import jax
+
+    identical = all(
+        np.array_equal(g, w) for g, w in
+        zip(jax.tree.leaves(res.outputs), jax.tree.leaves(want)))
+    rounds_ok = res.stats["rounds"] == st.rounds == pl.rounds
+    print(f"  executed: seconds={res.seconds[0]:.3f} "
+          f"rounds={res.stats['rounds']} (plan {pl.rounds}) "
+          f"cross_bytes={res.transport['cross_bytes']}")
+    print(f"  bit-identical to simulator: {identical}")
+    if args.smoke and not (
+            identical and rounds_ok
+            and res.transport["cross_msgs"] > 0):
+        print("SMOKE FAIL")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,335 @@
+"""Rank-addressed message transports for distributed schedule execution.
+
+A :class:`Transport` carries one schedule rank's sends/receives:
+``send(src, dst, payload)`` / ``recv(dst, src)`` address messages by
+*global schedule rank*, and per-(src, dst) FIFO order is guaranteed —
+exactly the ordering the round-structured IR needs (a rank never has
+two in-flight messages to the same peer within a round, and rounds are
+separated by the data dependency of using what was received).
+
+Two implementations:
+
+  * :class:`LocalTransport` — all ranks in one process (threads); the
+    unit-test substrate for :class:`~repro.dist.worker.RankExecutor`.
+  * :class:`SocketTransport` — each process owns a contiguous block of
+    ranks; intra-process messages short-circuit through the mailbox
+    while cross-process messages travel as length-prefixed pickle
+    frames over loopback TCP peer connections.  One daemon reader
+    thread per peer drains every incoming frame into the mailbox
+    unconditionally, so a blocking ``sendall`` on a cyclic send
+    pattern can never deadlock.
+
+Rendezvous is ``jax.distributed.initialize``-style: every worker
+connects to one coordinator address, reports its own listen port, and
+receives the full peer address map plus the run configuration; workers
+then build the all-pairs peer connections deterministically (connect
+to lower process indices, accept from higher ones).  Everything rides
+127.0.0.1, so the harness needs no real NICs.
+"""
+
+from __future__ import annotations
+
+import pickle
+import queue
+import socket
+import struct
+import threading
+import time
+
+
+class TransportError(RuntimeError):
+    """A transport-level failure (timeout, closed peer, bad frame)."""
+
+
+_LEN = struct.Struct(">Q")
+
+
+def send_msg(sock: socket.socket, obj) -> int:
+    """Write one length-prefixed pickle frame; returns frame bytes."""
+    blob = pickle.dumps(obj, protocol=pickle.HIGHEST_PROTOCOL)
+    sock.sendall(_LEN.pack(len(blob)) + blob)
+    return _LEN.size + len(blob)
+
+
+def _recv_exact(sock: socket.socket, n: int) -> bytes:
+    buf = bytearray()
+    while len(buf) < n:
+        chunk = sock.recv(n - len(buf))
+        if not chunk:
+            raise TransportError("peer closed the connection")
+        buf.extend(chunk)
+    return bytes(buf)
+
+
+def recv_msg(sock: socket.socket):
+    """Read one length-prefixed pickle frame."""
+    (n,) = _LEN.unpack(_recv_exact(sock, _LEN.size))
+    return pickle.loads(_recv_exact(sock, n))
+
+
+class _Mailbox:
+    """Thread-safe per-(src, dst) FIFO queues, created lazily."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._queues: dict[tuple[int, int], queue.Queue] = {}
+
+    def _q(self, src: int, dst: int) -> queue.Queue:
+        key = (src, dst)
+        with self._lock:
+            q = self._queues.get(key)
+            if q is None:
+                q = self._queues[key] = queue.Queue()
+            return q
+
+    def put(self, src: int, dst: int, payload):
+        self._q(src, dst).put(payload)
+
+    def get(self, src: int, dst: int, timeout: float | None):
+        try:
+            return self._q(src, dst).get(timeout=timeout)
+        except queue.Empty:
+            raise TransportError(
+                f"recv timed out waiting for rank {src} -> rank {dst} "
+                f"(timeout={timeout}s)") from None
+
+
+class Transport:
+    """Base: rank-addressed messaging with byte/message accounting.
+
+    ``stats()`` reports message and byte counters split into local
+    (same-process, mailbox short-circuit) and cross-process traffic —
+    ``dist_bench`` asserts the cross counters are nonzero to prove
+    messages really left the process.
+    """
+
+    p: int
+
+    def __init__(self, p: int, *, timeout: float = 120.0):
+        self.p = int(p)
+        self.timeout = timeout
+        self._stat_lock = threading.Lock()
+        self._local_msgs = 0
+        self._local_bytes = 0
+        self._cross_msgs = 0
+        self._cross_bytes = 0
+
+    def _count(self, nbytes: int, *, cross: bool):
+        with self._stat_lock:
+            if cross:
+                self._cross_msgs += 1
+                self._cross_bytes += nbytes
+            else:
+                self._local_msgs += 1
+                self._local_bytes += nbytes
+
+    def stats(self) -> dict:
+        with self._stat_lock:
+            return {
+                "local_msgs": self._local_msgs,
+                "local_bytes": self._local_bytes,
+                "cross_msgs": self._cross_msgs,
+                "cross_bytes": self._cross_bytes,
+            }
+
+    def send(self, src: int, dst: int, payload):
+        raise NotImplementedError
+
+    def recv(self, dst: int, src: int, timeout: float | None = None):
+        raise NotImplementedError
+
+    def close(self):
+        pass
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+
+def _payload_nbytes(payload) -> int:
+    import jax
+    import numpy as np
+
+    return sum(np.asarray(leaf).nbytes
+               for leaf in jax.tree.leaves(payload))
+
+
+class LocalTransport(Transport):
+    """All p ranks inside one process: pure mailbox, for thread-driven
+    unit tests of the per-rank executor."""
+
+    def __init__(self, p: int, *, timeout: float = 120.0):
+        super().__init__(p, timeout=timeout)
+        self._mail = _Mailbox()
+
+    def send(self, src: int, dst: int, payload):
+        self._count(_payload_nbytes(payload), cross=False)
+        self._mail.put(src, dst, payload)
+
+    def recv(self, dst: int, src: int, timeout: float | None = None):
+        return self._mail.get(src, dst, timeout or self.timeout)
+
+
+class SocketTransport(Transport):
+    """One process's endpoint of the multi-process transport.
+
+    Process k owns the contiguous global-rank block
+    ``[k·ranks_per_proc, (k+1)·ranks_per_proc)``.  Sends to co-resident
+    ranks short-circuit through the mailbox; sends to remote ranks
+    frame ``(src, dst, payload)`` over the peer's TCP connection.  A
+    daemon reader thread per peer demuxes every incoming frame into
+    the mailbox, so receives simply block on the FIFO queue.
+    """
+
+    def __init__(self, proc: int, nprocs: int, ranks_per_proc: int,
+                 peers: dict[int, socket.socket], *,
+                 timeout: float = 120.0):
+        super().__init__(nprocs * ranks_per_proc, timeout=timeout)
+        self.proc = int(proc)
+        self.nprocs = int(nprocs)
+        self.ranks_per_proc = int(ranks_per_proc)
+        self._mail = _Mailbox()
+        self._peers = dict(peers)
+        self._send_locks = {j: threading.Lock() for j in self._peers}
+        self._closed = False
+        self._readers = []
+        for j, sock in self._peers.items():
+            t = threading.Thread(target=self._reader, args=(j, sock),
+                                 name=f"transport-reader-{j}",
+                                 daemon=True)
+            t.start()
+            self._readers.append(t)
+
+    def owner(self, rank: int) -> int:
+        return rank // self.ranks_per_proc
+
+    def local_ranks(self) -> list[int]:
+        base = self.proc * self.ranks_per_proc
+        return list(range(base, base + self.ranks_per_proc))
+
+    def _reader(self, peer: int, sock: socket.socket):
+        try:
+            while True:
+                src, dst, payload = recv_msg(sock)
+                self._mail.put(src, dst, payload)
+        except (TransportError, OSError):
+            return  # peer closed / transport shut down
+
+    def send(self, src: int, dst: int, payload):
+        target = self.owner(dst)
+        if target == self.proc:
+            self._count(_payload_nbytes(payload), cross=False)
+            self._mail.put(src, dst, payload)
+            return
+        sock = self._peers.get(target)
+        if sock is None:
+            raise TransportError(
+                f"no peer connection to process {target} "
+                f"(rank {dst})")
+        with self._send_locks[target]:
+            n = send_msg(sock, (src, dst, payload))
+        self._count(n, cross=True)
+
+    def recv(self, dst: int, src: int, timeout: float | None = None):
+        if self.owner(dst) != self.proc:
+            raise TransportError(
+                f"process {self.proc} cannot recv for rank {dst} "
+                f"(owned by process {self.owner(dst)})")
+        return self._mail.get(src, dst, timeout or self.timeout)
+
+    def close(self):
+        if self._closed:
+            return
+        self._closed = True
+        for sock in self._peers.values():
+            try:
+                sock.shutdown(socket.SHUT_RDWR)
+            except OSError:
+                pass
+            sock.close()
+
+
+# ---------------------------------------------------------------------------
+# Rendezvous (jax.distributed.initialize-style: one coordinator address)
+# ---------------------------------------------------------------------------
+
+
+def _connect_retry(addr: tuple[str, int],
+                   deadline: float) -> socket.socket:
+    last = None
+    while time.monotonic() < deadline:
+        try:
+            return socket.create_connection(addr, timeout=5.0)
+        except OSError as e:
+            last = e
+            time.sleep(0.05)
+    raise TransportError(f"could not connect to {addr}: {last}")
+
+
+def rendezvous_worker(coord_addr: tuple[str, int], proc: int,
+                      nprocs: int, *, timeout: float = 60.0
+                      ) -> tuple[socket.socket,
+                                 dict[int, socket.socket], dict]:
+    """One worker's side of the rendezvous.
+
+    Connects to the coordinator, announces its own loopback listen
+    port, receives the full peer port map plus the run config, then
+    builds the all-pairs peer mesh: connect to every lower process
+    index (identifying itself), accept from every higher one.
+    Returns ``(coordinator_socket, peers, config)``.
+    """
+    deadline = time.monotonic() + timeout
+    listener = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+    listener.bind(("127.0.0.1", 0))
+    listener.listen(max(1, nprocs))
+    my_port = listener.getsockname()[1]
+
+    coord = _connect_retry(coord_addr, deadline)
+    coord.settimeout(timeout)
+    send_msg(coord, ("hello", proc, my_port))
+    tag, ports, config = recv_msg(coord)
+    if tag != "peers":
+        raise TransportError(f"bad rendezvous reply {tag!r}")
+    coord.settimeout(None)
+
+    peers: dict[int, socket.socket] = {}
+    for j in range(proc):
+        s = _connect_retry(("127.0.0.1", ports[j]), deadline)
+        send_msg(s, ("peer", proc))
+        peers[j] = s
+    listener.settimeout(max(1.0, deadline - time.monotonic()))
+    for _ in range(proc + 1, nprocs):
+        s, _ = listener.accept()
+        tag, j = recv_msg(s)
+        if tag != "peer":
+            raise TransportError(f"bad peer handshake {tag!r}")
+        peers[j] = s
+    listener.close()
+    for s in peers.values():
+        s.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+    return coord, peers, config
+
+
+def rendezvous_coordinator(listener: socket.socket, nprocs: int,
+                           config: dict, *, timeout: float = 60.0
+                           ) -> dict[int, socket.socket]:
+    """The coordinator's side: accept every worker's hello, then
+    broadcast the peer port map plus ``config``.  Returns the
+    per-process coordinator connections (the launcher's control
+    channel)."""
+    listener.settimeout(timeout)
+    conns: dict[int, socket.socket] = {}
+    ports: dict[int, int] = {}
+    for _ in range(nprocs):
+        conn, _ = listener.accept()
+        tag, proc, port = recv_msg(conn)
+        if tag != "hello" or proc in conns:
+            raise TransportError(
+                f"bad or duplicate hello from process {proc}")
+        conns[proc] = conn
+        ports[proc] = port
+    for conn in conns.values():
+        send_msg(conn, ("peers", ports, config))
+    return conns

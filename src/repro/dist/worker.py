@@ -1,0 +1,408 @@
+"""Per-rank message-passing execution of a schedule + the worker loop.
+
+:class:`RankExecutor` runs ONE rank's side of a
+:class:`~repro.core.schedule.Schedule` against a
+:class:`~repro.dist.transport.Transport`: each round's ppermute
+becomes explicit ``send``/``recv`` calls honouring the IR's peer
+structure (shift chains, butterfly exchanges, the pipelined segmented
+ring, all-gathers through a group root).  The numpy op sequence and
+combine orders mirror :class:`~repro.core.schedule.SimulatorExecutor`
+step for step, so a multi-process execution is **bit-identical** to
+the single-process simulator on the same schedule — the correctness
+contract ``benchmarks/dist_bench.py --check`` gates.
+
+Masked receives still consume their message (a discarded frame would
+otherwise alias a later round's receive on the same (src, dst) FIFO);
+only the *application* of the received payload is masked, exactly like
+the SPMD executor's select-on-combine-output.
+
+``worker_main()`` is the subprocess entry point
+(``python -m repro.dist.worker``): rendezvous via the
+``REPRO_DIST_*`` environment (coordinator address, process index,
+world size), then a task loop — "run" executes this process's rank
+block in one thread per rank, "pingpong" times a cross-process round
+trip for the "dci" tier calibration, "shutdown" exits.
+"""
+
+from __future__ import annotations
+
+import os
+import threading
+import time
+import traceback
+
+import numpy as np
+
+from repro.dist import transport as transport_lib
+
+
+def _np_tree(x):
+    import jax
+
+    return jax.tree.map(np.asarray, x)
+
+
+def _tree_copy(x):
+    import jax
+
+    return jax.tree.map(lambda a: np.asarray(a).copy(), x)
+
+
+class RankExecutor:
+    """Execute one global rank's side of a schedule over a transport.
+
+    ``stats`` (a :class:`~repro.core.schedule.CollectiveStats`), when
+    given, receives the simulator's aggregate recording — callers pass
+    it for exactly one rank (global rank 0) so the totals match the
+    single-process measurement and the plan's predictions.
+    """
+
+    def __init__(self, transport: transport_lib.Transport):
+        self.transport = transport
+
+    # -- stats recording (simulator-compatible aggregates) ------------
+
+    @staticmethod
+    def _rec_round(stats, tree):
+        if stats is not None:
+            from repro.core.schedule import _nbytes
+
+            stats.rounds += 1
+            stats.bytes_per_round.append(_nbytes(tree))
+
+    @staticmethod
+    def _rec_op(stats, n: int = 1):
+        if stats is not None:
+            stats.op_applications += n
+
+    @staticmethod
+    def _rec_allgather(stats):
+        if stats is not None:
+            stats.allgathers += 1
+
+    # -- execution -----------------------------------------------------
+
+    def execute(self, sched, x, m, rank: int, *, stats=None):
+        """Run ``sched`` for global ``rank`` on per-rank payload ``x``
+        (no leading rank axis); returns this rank's output (a tuple
+        for multi-output schedules)."""
+        from repro.core import monoid as monoid_lib
+        from repro.core import schedule as schedule_lib
+
+        op = monoid_lib.NUMPY_OPS.get(m.name, m.op)
+        ident_fn = monoid_lib.NUMPY_IDENTITY.get(m.name)
+        if ident_fn is None:
+            def ident_fn(t):
+                return _np_tree(m.identity_like(t))
+
+        if sched.layout is not None:
+            packed = schedule_lib.pack_payloads(
+                sched.layout, [_np_tree(xi) for xi in x], xp=np)
+            out = self._execute(sched, packed, m, op, ident_fn, rank,
+                                stats)
+            return schedule_lib.unpack_fused_outputs(
+                sched.layout, out, len(sched.outputs))
+        return self._execute(sched, _np_tree(x), m, op, ident_fn,
+                             rank, stats)
+
+    def _execute(self, sched, x, m, op, ident_fn, rank, stats):
+        from repro.core import schedule as schedule_lib
+
+        w = _tree_copy(x) if sched.init == "x" else ident_fn(x)
+        regs: dict = {}
+        for run in schedule_lib._stage_runs(sched.steps):
+            if isinstance(run, schedule_lib.RoundStep):  # control
+                st = run
+                if st.kind == "stage":
+                    if st.reg:
+                        regs[st.reg] = w
+                    if st.src == "w":
+                        x = w
+                    if st.init == "identity":
+                        w = ident_fn(x)
+                    elif st.init == "x":
+                        w = _tree_copy(x)
+                    elif st.init != "w":
+                        w = regs[st.init]
+                else:  # merge
+                    other = x if st.reg == "$x" else regs[st.reg]
+                    self._rec_op(stats)
+                    w = op(w, other)
+                continue
+            g, q = self._my_group(sched, run[0].axis, rank)
+            if run[0].kind == "seg_shift":
+                w = self._run_segmented(
+                    run, x, op, ident_fn, g, q,
+                    schedule_lib._run_seg_count(run, sched), stats)
+            elif run[0].kind == "scan_reduce":
+                w, prefix = self._run_scan_reduce(
+                    run, x, w, m, op, ident_fn, g, q, stats)
+                if run[-1].reg:
+                    regs[run[-1].reg] = prefix
+            else:
+                w = self._run_steps(run, x, w, m, op, ident_fn, g, q,
+                                    stats)
+        outs = tuple(w if o == "$w" else regs[o] for o in sched.outputs)
+        return outs[0] if len(outs) == 1 else outs
+
+    @staticmethod
+    def _my_group(sched, axis_tag, rank):
+        from repro.core.schedule import _axis_groups
+
+        for g in _axis_groups(sched, axis_tag):
+            if rank in g:
+                return g, g.index(rank)
+        raise ValueError(f"rank {rank} not in any group of axis "
+                         f"{axis_tag!r} (p={sched.p})")
+
+    def _run_steps(self, steps, x, w, m, op, ident_fn, g, q, stats):
+        tr = self.transport
+        pg = len(g)
+        gathered = None
+        for st in steps:
+            if st.kind == "shift":
+                if st.send == "x":
+                    payload = x
+                elif st.send == "w":
+                    payload = w
+                else:  # "w_op_x"
+                    self._rec_op(stats)
+                    payload = op(w, x)
+                self._rec_round(stats, payload)
+                if st.combine == "op":
+                    self._rec_op(stats)
+                if q + st.skip < pg:
+                    tr.send(g[q], g[q + st.skip], payload)
+                if q >= st.skip:
+                    # always consume (the mask only gates application)
+                    recv = tr.recv(g[q], g[q - st.skip])
+                    ok = q >= st.bound if st.mask == "ge" else \
+                        q > st.bound
+                    if ok:
+                        w = recv if st.combine == "copy" \
+                            else op(recv, w)
+            elif st.kind == "exchange":
+                self._rec_round(stats, w)
+                self._rec_op(stats, st.op_count(m.commutative))
+                j = q ^ st.skip
+                if j < pg:
+                    tr.send(g[q], g[j], w)
+                    recv = tr.recv(g[q], g[j])
+                    # recv covers the lower ranks iff our side bit is
+                    # set; commutative monoids use one order (simulator
+                    # parity: op(old[j], old[q]))
+                    w = op(recv, w) if (m.commutative or q & st.skip) \
+                        else op(w, recv)
+            elif st.kind == "allgather":
+                self._rec_allgather(stats)
+                gathered = self._allgather(x, g, q)
+            elif st.kind == "fold":
+                self._rec_op(stats, st.fold_count)
+                acc = ident_fn(x)
+                for t in range(q):
+                    acc = op(acc, gathered[t])
+                w = acc
+            elif st.kind == "bcast":
+                self._rec_allgather(stats)
+                root = g[st.root]
+                if g[q] == root:
+                    for i in g:
+                        if i != root:
+                            self.transport.send(root, i, w)
+                else:
+                    w = tr.recv(g[q], root)
+        return w
+
+    def _allgather(self, x, g, q):
+        """All ranks' inputs in group order, via the group root (rank
+        g[0] collects, then redistributes the full list)."""
+        tr = self.transport
+        root = g[0]
+        if g[q] == root:
+            vals = [x] + [tr.recv(root, i) for i in g[1:]]
+            for i in g[1:]:
+                tr.send(root, i, vals)
+            return vals
+        tr.send(g[q], root, x)
+        return tr.recv(g[q], root)
+
+    def _run_scan_reduce(self, steps, x, w, m, op, ident_fn, g, q,
+                         stats):
+        tr = self.transport
+        prefix = ident_fn(x)
+        for st in steps:
+            self._rec_round(stats, w)
+            self._rec_op(stats, st.op_count(m.commutative))
+            j = q ^ st.skip
+            if j >= len(g):
+                continue
+            tr.send(g[q], g[j], w)
+            recv = tr.recv(g[q], g[j])
+            if q & st.skip:  # partner covers lower ranks
+                prefix = op(recv, prefix)
+                w = op(recv, w)
+            else:
+                w = op(recv, w) if m.commutative else op(w, recv)
+        return w, prefix
+
+    def _run_segmented(self, steps, x, op, ident_fn, g, q, S, stats):
+        import jax
+
+        from repro.core.schedule import _np_set_seg, _np_split, \
+            _np_unsplit
+
+        tr = self.transport
+        pg = len(g)
+        Vs = jax.tree.map(lambda a: _np_split(a, S), x)
+        seg_of = (lambda v, s: jax.tree.map(lambda a: a[s], v))
+        R = ident_fn(Vs)
+        cur = jax.tree.map(lambda a: a.copy(), seg_of(Vs, 0))
+        ident = ident_fn(cur)
+        for st in steps:
+            self._rec_round(stats, cur)
+            if st.prep:
+                self._rec_op(stats)
+            if q + 1 < pg:
+                tr.send(g[q], g[q + 1], cur)
+            s = st.t + 1 - q
+            if q >= 1:
+                recv = tr.recv(g[q], g[q - 1])
+                base = recv if 0 <= s < S else ident
+            else:
+                base = ident
+            sc = min(max(s, 0), S - 1)
+            if q >= 1 and 0 <= s < S:
+                R = jax.tree.map(
+                    lambda acc, b: _np_set_seg(acc, sc, b), R, base)
+            if st.prep:
+                cur = op(base, seg_of(Vs, sc))
+        return jax.tree.map(_np_unsplit, R, _np_tree(x))
+
+
+def run_ranks_threaded(transport, sched, xs, m, *, ranks=None,
+                       stats_rank=None, stats=None):
+    """Run a block of ranks concurrently, one thread each (the worker
+    process's local block, or every rank for LocalTransport tests).
+
+    ``xs`` maps position to the per-rank payload of ``ranks[i]``
+    (default: all p ranks).  ``stats`` is recorded by ``stats_rank``
+    only (pass global rank 0 on the process that owns it, so totals
+    mirror one simulator run).  Returns outputs in ``ranks`` order and
+    re-raises the first per-rank failure.
+    """
+    ranks = list(range(sched.p)) if ranks is None else list(ranks)
+    outs: list = [None] * len(ranks)
+    errs: list = []
+
+    def go(idx, rank):
+        try:
+            ex = RankExecutor(transport)
+            outs[idx] = ex.execute(
+                sched, xs[idx], m, rank,
+                stats=stats if rank == stats_rank else None)
+        except BaseException:  # noqa: BLE001 - re-raised on the caller
+            errs.append((rank, traceback.format_exc()))
+
+    threads = [threading.Thread(target=go, args=(i, r),
+                                name=f"rank-{r}", daemon=True)
+               for i, r in enumerate(ranks)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    if errs:
+        rank, tb = errs[0]
+        raise RuntimeError(f"rank {rank} failed:\n{tb}")
+    return outs
+
+
+# ---------------------------------------------------------------------------
+# Worker process entry point
+# ---------------------------------------------------------------------------
+
+
+def _stats_dict(st) -> dict:
+    return {"rounds": st.rounds,
+            "op_applications": st.op_applications,
+            "allgathers": st.allgathers,
+            "bytes_per_round": list(st.bytes_per_round)}
+
+
+def _handle_run(tr, task):
+    from repro.core import monoid as monoid_lib
+    from repro.core import schedule as schedule_lib
+
+    sched = task["schedule"]
+    m = monoid_lib.get(task["monoid"])
+    xs = task["xs"]
+    ranks = tr.local_ranks()
+    stats = schedule_lib.CollectiveStats() if task.get("collect") \
+        else None
+    seconds = []
+    outs = None
+    for rep in range(int(task.get("repeats", 1))):
+        t0 = time.perf_counter()
+        outs = run_ranks_threaded(
+            tr, sched, xs, m, ranks=ranks, stats_rank=0,
+            stats=stats if rep == 0 else None)
+        seconds.append(time.perf_counter() - t0)
+    return {"outputs": outs, "seconds": seconds,
+            "stats": _stats_dict(stats) if stats else None,
+            "transport": tr.stats()}
+
+
+def _handle_pingpong(tr, task):
+    """Time ``repeats`` payload round trips between this process's
+    first rank and a peer process's first rank (the "dci" hop clock
+    the cross-process calibration fits)."""
+    me = tr.local_ranks()[0]
+    peer = int(task["peer_proc"]) * tr.ranks_per_proc
+    payload = np.zeros(max(1, int(task["nbytes"]) // 8),
+                       dtype=np.int64)
+    n = int(task.get("repeats", 10))
+    if task.get("lead"):
+        t0 = time.perf_counter()
+        for _ in range(n):
+            tr.send(me, peer, payload)
+            tr.recv(me, peer)
+        return {"seconds": time.perf_counter() - t0}
+    for _ in range(n):
+        got = tr.recv(me, peer)
+        tr.send(me, peer, got)
+    return {"seconds": None}
+
+
+def worker_main() -> int:
+    host, port = os.environ["REPRO_DIST_COORD"].rsplit(":", 1)
+    proc = int(os.environ["REPRO_DIST_PROC"])
+    nprocs = int(os.environ["REPRO_DIST_NPROCS"])
+    coord, peers, config = transport_lib.rendezvous_worker(
+        (host, int(port)), proc, nprocs,
+        timeout=float(config_timeout := os.environ.get(
+            "REPRO_DIST_TIMEOUT", "60")))
+    tr = transport_lib.SocketTransport(
+        proc, nprocs, int(config.get("ranks_per_proc", 1)), peers,
+        timeout=float(config.get("timeout", config_timeout)))
+    try:
+        while True:
+            tag, task = transport_lib.recv_msg(coord)
+            if tag == "shutdown":
+                return 0
+            try:
+                if tag == "run":
+                    reply = _handle_run(tr, task)
+                elif tag == "pingpong":
+                    reply = _handle_pingpong(tr, task)
+                else:
+                    raise ValueError(f"unknown task {tag!r}")
+                transport_lib.send_msg(coord, ("done", reply))
+            except Exception:  # noqa: BLE001 - reported to launcher
+                transport_lib.send_msg(
+                    coord, ("error", traceback.format_exc()))
+    finally:
+        tr.close()
+        coord.close()
+
+
+if __name__ == "__main__":
+    raise SystemExit(worker_main())

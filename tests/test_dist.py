@@ -215,6 +215,10 @@ def test_factor_ranks():
     assert scan_api.factor_ranks(8, 1) == (1, 8)
     with pytest.raises(ValueError, match="divide"):
         scan_api.factor_ranks(10, 3)
+    with pytest.raises(ValueError, match="nprocs >= 1"):
+        scan_api.factor_ranks(8, 0)
+    with pytest.raises(ValueError, match="nprocs >= 1"):
+        scan_api.factor_ranks(8, -2)
 
 
 def test_plan_hierarchical_rejects_degenerate_tiers():
