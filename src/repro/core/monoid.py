@@ -149,7 +149,7 @@ XOR = Monoid(
 )
 
 
-def _affine_op(lo, hi):
+def affine_combine(lo, hi):
     """Composition of elementwise affine maps x -> a*x + b.
 
     ``lo`` is applied first (covers lower ranks), then ``hi``:
@@ -160,10 +160,18 @@ def _affine_op(lo, hi):
     chunk scans (RWKV, Mamba-style): associative, NON-commutative, and
     "expensive" relative to plain add — exactly the operator class the
     paper's q-1 ⊕-application bound targets.
+
+    THE one definition: the Pallas scan engine
+    (``kernels.scan_engine``), the SSM chunk kernel and the XLA-path
+    model scans (``models.mamba``/``models.rwkv``) all import this —
+    no private duplicates (a regression test enforces it).
     """
     a_lo, b_lo = lo
     a_hi, b_hi = hi
     return (a_hi * a_lo, a_hi * b_lo + b_hi)
+
+
+_affine_op = affine_combine  # backwards-compatible private alias
 
 
 def _affine_identity(x):

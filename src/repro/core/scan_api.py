@@ -87,6 +87,13 @@ class CostModel:
     beta: seconds per byte on the bandwidth-critical path.
     gamma: seconds per byte touched by one ⊕ application (HBM streaming
       of the two operands), scaled by the monoid's relative op cost.
+    gamma_pass: seconds per byte per *HBM pass* of the round kernels
+      (``Schedule.kernel_passes``, DESIGN §7).  The default 0.0 keeps
+      γ pricing purely op-count-based — identical to historical
+      behavior — while a calibrated profile can charge the fused
+      single-pass round path less than the baseline multi-pass one
+      (ops alone cannot tell them apart: fusion changes the pass
+      count, not the ⊕ count).
     source: provenance of the constants — "default" (hand-guessed
       values) or "calibrated" (fitted by :mod:`repro.core.tune` from
       measured schedule timings).  Part of equality/hash, so plans
@@ -97,23 +104,30 @@ class CostModel:
     alpha: float = 1e-6  # ICI launch+hop latency
     beta: float = 1.0 / 50e9  # ICI link bandwidth
     gamma: float = 2.0 / 819e9  # HBM streaming for one ⊕
+    gamma_pass: float = 0.0  # per-byte-per-HBM-pass (0: op-count only)
     source: str = "default"  # "default" | "calibrated"
 
     def parts(self, *, hops: int, serial_bytes: float, ops: int,
-              payload_bytes: int, op_cost: float = 1.0) -> dict:
+              payload_bytes: int, op_cost: float = 1.0,
+              passes: int = 0) -> dict:
         """The three cost components, separately (``explain()`` uses
-        them to say *why* a candidate lost)."""
+        them to say *why* a candidate lost).  ``passes`` — the plan's
+        HBM-pass count — folds into the γ component when
+        ``gamma_pass`` is nonzero (it prices memory traffic, like γ)."""
         return {
             "alpha": self.alpha * hops,
             "beta": self.beta * serial_bytes,
-            "gamma": self.gamma * ops * payload_bytes * op_cost,
+            "gamma": self.gamma * ops * payload_bytes * op_cost
+            + self.gamma_pass * passes * payload_bytes,
         }
 
     def cost(self, *, hops: int, serial_bytes: float, ops: int,
-             payload_bytes: int, op_cost: float = 1.0) -> float:
+             payload_bytes: int, op_cost: float = 1.0,
+             passes: int = 0) -> float:
         return sum(self.parts(
             hops=hops, serial_bytes=serial_bytes, ops=ops,
-            payload_bytes=payload_bytes, op_cost=op_cost).values())
+            payload_bytes=payload_bytes, op_cost=op_cost,
+            passes=passes).values())
 
 
 DEFAULT_COST_MODEL = CostModel()
@@ -210,10 +224,15 @@ class CostProfile:
         (source/mesh) fingerprint differently."""
         import hashlib
 
+        # gamma_pass joins the blob only when set, so profiles written
+        # before the pass-aware γ term keep their recorded fingerprints
         blob = repr((self.schema_version, self.source,
                      self.mesh_fingerprint, self.axis_tiers,
                      self.default_tier,
                      tuple((n, cm.alpha, cm.beta, cm.gamma, cm.source)
+                           if cm.gamma_pass == 0.0 else
+                           (n, cm.alpha, cm.beta, cm.gamma,
+                            cm.gamma_pass, cm.source)
                            for n, cm in self.tiers))).encode()
         return hashlib.sha256(blob).hexdigest()[:12]
 
@@ -227,7 +246,9 @@ class CostProfile:
             "residuals": dict(self.residuals),
             "tiers": {
                 name: {"alpha": cm.alpha, "beta": cm.beta,
-                       "gamma": cm.gamma, "source": cm.source}
+                       "gamma": cm.gamma, "source": cm.source,
+                       **({"gamma_pass": cm.gamma_pass}
+                          if cm.gamma_pass else {})}
                 for name, cm in self.tiers
             },
             "fingerprint": self.fingerprint(),
@@ -243,6 +264,7 @@ class CostProfile:
             tiers=tuple(
                 (name, CostModel(alpha=t["alpha"], beta=t["beta"],
                                  gamma=t["gamma"],
+                                 gamma_pass=t.get("gamma_pass", 0.0),
                                  source=t.get("source", "default")))
                 for name, t in sorted(obj["tiers"].items())),
             source=obj.get("source", "default"),
@@ -481,7 +503,11 @@ class ScanPlan:
     ``bytes_on_wire`` is the total bytes through each device's port for
     the planned payload (for the segmented ring: rounds·ceil(m/S), the
     pipelined serialization).  ``segments`` is the planner-chosen (or
-    spec-pinned) payload segment count S.  Multi-axis plans report a
+    spec-pinned) payload segment count S.  ``kernel_passes`` is the
+    fused-path HBM-pass budget of the schedule's per-round kernels
+    (``Schedule.kernel_passes``, DESIGN §7) — what the fused
+    ``PallasExecutor`` records in ``collect_stats()``; a cost model
+    with nonzero ``gamma_pass`` prices it.  Multi-axis plans report a
     ``composite(inner+allreduce+outer)`` algorithm label and keep
     their ``sub_plans`` (inner exscan, minor-axis allreduce, outer
     exscan) as inspectable provenance — ``schedule()`` inlines them
@@ -507,6 +533,7 @@ class ScanPlan:
     cost_model: CostModel
     segments: int = 1
     sub_plans: tuple = ()
+    kernel_passes: int = 0
 
     def schedule(self) -> "schedule_lib.Schedule":
         """The executable round-by-round IR of this plan (cached).
@@ -573,7 +600,8 @@ class ScanPlan:
         return self.cost_model.parts(
             hops=self.rounds + (self.p - 1) * self.allgathers,
             serial_bytes=self.bytes_on_wire, ops=self.op_applications,
-            payload_bytes=seg_bytes, op_cost=op_cost)
+            payload_bytes=seg_bytes, op_cost=op_cost,
+            passes=self.kernel_passes)
 
     def explain(self) -> tuple:
         """The runner-up table: every candidate algorithm's predicted
@@ -638,6 +666,7 @@ class ScanPlan:
                 "op_applications": cand.op_applications,
                 "allgathers": cand.allgathers,
                 "bytes_on_wire": cand.bytes_on_wire,
+                "kernel_passes": cand.kernel_passes,
                 "cost": cand.cost,
                 "cost_alpha": parts["alpha"],
                 "cost_beta": parts["beta"],
@@ -677,14 +706,16 @@ def _candidate_plans(spec: ScanSpec, p: int, nbytes: int,
         ag = sched.allgathers
         seg_bytes = -(-nbytes // S) if nbytes else 0
         wire = rounds * seg_bytes + ag * p * nbytes
+        passes = sched.kernel_passes(mono.commutative)
         return ScanPlan(
             spec=spec, p=p, algorithm=algo.name, payload_bytes=nbytes,
             rounds=rounds, op_applications=ops, allgathers=ag,
             bytes_on_wire=wire,
             cost=cm.cost(hops=rounds + (p - 1) * ag,
                          serial_bytes=wire, ops=ops,
-                         payload_bytes=seg_bytes, op_cost=op_cost),
-            cost_model=cm, segments=S)
+                         payload_bytes=seg_bytes, op_cost=op_cost,
+                         passes=passes),
+            cost_model=cm, segments=S, kernel_passes=passes)
 
     def candidates(algo: ScanAlgorithm) -> list[ScanPlan]:
         if not (algo.segmentable and mono.segmentable):
@@ -781,7 +812,8 @@ def _plan_impl(spec: ScanSpec, ps: tuple, nbytes: int,
         allgathers=sum(s.allgathers for s in subs),
         bytes_on_wire=sum(s.bytes_on_wire for s in subs),
         cost=sum(s.cost for s in subs) + cm_top.gamma * nbytes * op_cost,
-        cost_model=cm_top, sub_plans=subs)
+        cost_model=cm_top, sub_plans=subs,
+        kernel_passes=sum(s.kernel_passes for s in subs))
 
 
 _plan_cached = functools.lru_cache(maxsize=PLAN_CACHE_MAXSIZE)(_plan_impl)

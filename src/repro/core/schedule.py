@@ -109,6 +109,13 @@ class CollectiveStats:
     op_applications: int = 0  # ⊕ applications per device (SPMD lockstep)
     allgathers: int = 0
     bytes_per_round: list = dataclasses.field(default_factory=list)
+    # Pallas-path accounting (recorded by PallasExecutor only; the
+    # generic/simulator executors leave both at 0).  ``hbm_passes``
+    # counts sequential sweeps over a round's payload — kernel
+    # launches plus the XLA select sweeps the fused round path
+    # absorbs into the kernel; see RoundStep.kernel_passes.
+    kernel_launches: int = 0  # pallas_call launches
+    hbm_passes: int = 0  # payload HBM traversals of round ⊕ work
 
 
 _tls = threading.local()
@@ -154,6 +161,15 @@ def _record_allgather():
     s = _stats()
     if s is not None:
         s.allgathers += 1
+
+
+def _record_kernel(launches: int, passes: int):
+    """Count on-chip kernel launches / HBM passes of one round's ⊕
+    work (Pallas executor only; execution counts, like _record_op)."""
+    s = _stats()
+    if s is not None:
+        s.kernel_launches += launches
+        s.hbm_passes += passes
 
 
 # ---------------------------------------------------------------------------
@@ -267,6 +283,63 @@ class RoundStep:
             n += 1
         return n
 
+    def kernel_passes(self, commutative: bool = False, *,
+                      fused: bool = True) -> int:
+        """HBM passes over this round's payload on the Pallas path.
+
+        A "pass" is one sequential sweep of the payload: a kernel
+        launch, or an XLA select sweep the baseline path runs on a
+        kernel's output.  ``fused=True`` is the engine's fused round
+        path (one grid pass does the combine orders, the mask/side
+        select and the store); ``fused=False`` is the per-round
+        ``block_combine`` baseline (one launch per ⊕ plus host-graph
+        selects).  Copy/gather rounds carry no ⊕ work and count 0 —
+        the metric prices combine traffic, which both modes share
+        otherwise.  The fusion wins: ring prep 2→1, non-commutative
+        butterfly 3→1, scan_reduce 2→1 (commutative) / 5→1."""
+        if self.kind == "shift":
+            n = 1 if self.send == "w_op_x" else 0
+            return n + (1 if self.combine == "op" else 0)
+        if self.kind == "seg_shift":
+            if not self.prep:
+                return 0
+            return 1 if fused else 2  # baseline: combine + valid-select
+        if self.kind == "exchange":
+            if commutative:
+                return 1
+            return 1 if fused else 3  # baseline: 2 orders + side select
+        if self.kind == "scan_reduce":
+            if fused:
+                return 1  # (P, T) pair batched into one launch
+            return 2 if commutative else 5  # 3 launches + 2 selects
+        if self.kind == "fold":
+            return self.fold_count
+        if self.kind == "merge":
+            return 1
+        return 0
+
+    def kernel_launches(self, commutative: bool = False, *,
+                        fused: bool = True) -> int:
+        """``pallas_call`` launches for this round on the Pallas path
+        (per payload dtype group; k same-dtype leaves batch into one
+        launch on the fused path)."""
+        if self.kind == "shift":
+            n = 1 if self.send == "w_op_x" else 0
+            return n + (1 if self.combine == "op" else 0)
+        if self.kind == "seg_shift":
+            return 1 if self.prep else 0
+        if self.kind == "exchange":
+            return 1 if (commutative or fused) else 2
+        if self.kind == "scan_reduce":
+            if fused:
+                return 1
+            return 2 if commutative else 3
+        if self.kind == "fold":
+            return self.fold_count
+        if self.kind == "merge":
+            return 1
+        return 0
+
     def describe(self) -> str:
         at = f"  @{self.axis}" if self.axis is not None else ""
         if self.kind == "shift":
@@ -340,6 +413,21 @@ class Schedule:
         """⊕ executions per device, honouring the commutative-monoid
         elision in butterfly/scan_reduce rounds."""
         return sum(s.op_count(commutative) for s in self.steps)
+
+    def kernel_passes(self, commutative: bool = False, *,
+                      fused: bool = True) -> int:
+        """Total HBM passes of the schedule's ⊕ work on the Pallas
+        path (see :meth:`RoundStep.kernel_passes`); what
+        ``collect_stats().hbm_passes`` measures under the Pallas
+        executor in the matching mode."""
+        return sum(s.kernel_passes(commutative, fused=fused)
+                   for s in self.steps)
+
+    def kernel_launches(self, commutative: bool = False, *,
+                        fused: bool = True) -> int:
+        """Total ``pallas_call`` launches on the Pallas path."""
+        return sum(s.kernel_launches(commutative, fused=fused)
+                   for s in self.steps)
 
     @property
     def allgathers(self) -> int:
@@ -924,6 +1012,50 @@ class Executor:
         return jax.tree.map(
             lambda c, h: jnp.where(keep, c, h), combined, hi)
 
+    def exchange_combine(self, m: monoid_lib.Monoid, recv, w, low_side):
+        """One non-commutative butterfly round's update: both combine
+        orders, selected by the rank's side bit.  The generic path is
+        two ⊕ plus a select sweep; the Pallas engine fuses all three
+        into one grid pass."""
+        lo = self.combine(m, recv, w)
+        hi = self.combine(m, w, recv)
+        return jax.tree.map(
+            lambda a, b: jnp.where(low_side, a, b), lo, hi)
+
+    def scan_reduce_combine(self, m: monoid_lib.Monoid, recv, w,
+                            prefix, low_side):
+        """One fused exscan+allreduce round's (T, P) register update.
+        Returns (new_w, new_prefix).  The generic path launches one ⊕
+        per combine plus selects; the Pallas engine batches the pair
+        into a single grid pass."""
+        if m.commutative:
+            prefix = self.masked_combine(m, low_side, recv, prefix)
+            w = self.combine(m, recv, w)
+            return w, prefix
+        new_p = self.combine(m, recv, prefix)
+        t_lo = self.combine(m, recv, w)
+        t_hi = self.combine(m, w, recv)
+        prefix = jax.tree.map(
+            lambda a, b: jnp.where(low_side, a, b), new_p, prefix)
+        w = jax.tree.map(
+            lambda a, b: jnp.where(low_side, a, b), t_lo, t_hi)
+        return w, prefix
+
+    def prep_combine(self, m: monoid_lib.Monoid, valid, recv, seg,
+                     ident):
+        """The segmented ring's forward-prep ⊕: recv ⊕ V[s] where
+        valid, else plain V[s].  Generic path: identity-fixup select
+        then combine (two payload sweeps); the Pallas engine runs it
+        as one masked-combine pass."""
+        base = jax.tree.map(
+            lambda t, i: jnp.where(valid, t, i), recv, ident)
+        return self.combine(m, base, seg)
+
+    def _note_round_kernels(self, st: "RoundStep",
+                            m: monoid_lib.Monoid):
+        """Stats hook: executors that lower ⊕ onto on-chip kernels
+        record their launch/HBM-pass counts here (no-op otherwise)."""
+
     def execute(self, schedule: Schedule, x, m: monoid_lib.Monoid):
         raise NotImplementedError
 
@@ -1000,6 +1132,7 @@ class SPMDExecutor(Executor):
                     other = x if st.reg == "$x" else regs[st.reg]
                     w = self.combine(m, w, other)
                     _record_op()
+                    self._note_round_kernels(st, m)
                 continue
             axis = run[0].axis if run[0].axis is not None \
                 else self.axis_name
@@ -1052,11 +1185,8 @@ class SPMDExecutor(Executor):
                     _record_op()
                 else:
                     low_side = (r & st.skip) != 0  # partner is lower
-                    lo = self.combine(m, recv, w)
-                    hi = self.combine(m, w, recv)
+                    w = self.exchange_combine(m, recv, w, low_side)
                     _record_op(2)
-                    w = jax.tree.map(
-                        lambda a, b: jnp.where(low_side, a, b), lo, hi)
             elif st.kind == "allgather":
                 _record_allgather()
                 gathered = jax.tree.map(
@@ -1079,6 +1209,7 @@ class SPMDExecutor(Executor):
                 w = jax.tree.map(
                     lambda t: lax.all_gather(t, axis, axis=0)[st.root],
                     w)
+            self._note_round_kernels(st, m)
         return w
 
     def _run_scan_reduce(self, steps, x, w, m, axis, p):
@@ -1097,19 +1228,10 @@ class SPMDExecutor(Executor):
             recv = jax.tree.map(
                 lambda t: lax.ppermute(t, axis, perm), w)
             low_side = (r & st.skip) != 0  # partner covers lower ranks
-            if m.commutative:
-                prefix = self.masked_combine(m, low_side, recv, prefix)
-                w = self.combine(m, recv, w)
-                _record_op(2)
-                continue
-            new_p = self.combine(m, recv, prefix)
-            t_lo = self.combine(m, recv, w)
-            t_hi = self.combine(m, w, recv)
-            _record_op(3)
-            prefix = jax.tree.map(
-                lambda a, b: jnp.where(low_side, a, b), new_p, prefix)
-            w = jax.tree.map(
-                lambda a, b: jnp.where(low_side, a, b), t_lo, t_hi)
+            w, prefix = self.scan_reduce_combine(m, recv, w, prefix,
+                                                 low_side)
+            _record_op(2 if m.commutative else 3)
+            self._note_round_kernels(st, m)
         return w, prefix
 
     def _run_segmented(self, steps, x, m, axis, p, S):
@@ -1140,6 +1262,7 @@ class SPMDExecutor(Executor):
             _record_round(cur)
             if st.prep:
                 _record_op()
+            self._note_round_kernels(st, m)
 
         def seg_of(tree, slot):
             return jax.tree.map(
@@ -1158,9 +1281,8 @@ class SPMDExecutor(Executor):
         def prep(recv, valid, sc):
             # forward Q = recv ⊕ V[s] next round (rank 0: the identity
             # base makes this plain V[t+1], its next raw segment)
-            base = jax.tree.map(
-                lambda t, i: jnp.where(valid, t, i), recv, ident)
-            return self.combine(m, base, seg_of(V, sc))
+            return self.prep_combine(m, valid, recv, seg_of(V, sc),
+                                     ident)
 
         if self.unrolled:
             for st in steps:
@@ -1197,50 +1319,115 @@ class SPMDExecutor(Executor):
 
 
 class PallasExecutor(SPMDExecutor):
-    """SPMD executor whose RoundStep ⊕ hook runs on-chip: elementwise
-    monoids (``Monoid.leaf_op``) are tiled through VMEM by the Pallas
-    block-combine kernel; structured monoids fall back to the plain op.
+    """SPMD executor whose RoundStep ⊕ hooks run on-chip through the
+    single-pass scan engine (``kernels.scan_engine``, DESIGN §7):
+    elementwise monoids (``Monoid.leaf_op``) and the affine pair are
+    tiled through VMEM; other structured monoids (matmul) fall back to
+    the plain op.
+
+    ``fused=True`` (default) is the engine's fused round path: a
+    round's combine order(s), its receive-mask/side select, and the
+    result store run in ONE grid pass, with a round's same-dtype
+    payload leaves (fused-layout slots, scan_reduce's (P, T) pair)
+    batched into a single ``pallas_call``.  ``fused=False`` keeps the
+    legacy per-round per-leaf ``block_combine`` launches with
+    host-graph selects — the baseline ``benchmarks/exec_bench.py``
+    measures the fusion against.  Either mode records its kernel
+    launch / HBM-pass counts into :func:`collect_stats`
+    (``kernel_launches`` / ``hbm_passes``), matching
+    :meth:`Schedule.kernel_passes` by construction.
 
     Note: ``shard_map`` has no replication rule for ``pallas_call`` —
     wrap the call site with ``check_vma=False`` (``check_rep=False`` on
     older jax)."""
 
     def __init__(self, axis_name=None, *, interpret: bool | None = None,
-                 block_rows: int = 256):
+                 block_rows: int = 256, fused: bool = True):
         super().__init__(axis_name)
         self.interpret = interpret
         self.block_rows = block_rows
+        self.fused = fused
 
     def _interpret(self) -> bool:
         if self.interpret is None:
             return jax.default_backend() != "tpu"
         return self.interpret
 
-    def combine(self, m: monoid_lib.Monoid, lo, hi):
-        if m.leaf_op is None:
-            return super().combine(m, lo, hi)
-        from repro.kernels.blelloch_exscan import block_combine
+    def _engine(self):
+        from repro.kernels import scan_engine
+        return scan_engine
 
-        interpret = self._interpret()
-        return jax.tree.map(
-            lambda a, b: block_combine(
-                a, b, m.leaf_op, block_rows=self.block_rows,
-                interpret=interpret), lo, hi)
+    def combine(self, m: monoid_lib.Monoid, lo, hi):
+        se = self._engine()
+        if self.fused:
+            out = se.tree_combine(m, lo, hi,
+                                  block_rows=self.block_rows,
+                                  interpret=self._interpret())
+            if out is not None:
+                return out
+        elif m.leaf_op is not None:
+            interpret = self._interpret()
+            return jax.tree.map(
+                lambda a, b: se.block_combine(
+                    a, b, m.leaf_op, block_rows=self.block_rows,
+                    interpret=interpret), lo, hi)
+        return super().combine(m, lo, hi)
 
     def masked_combine(self, m: monoid_lib.Monoid, keep, lo, hi):
         """The fused masked path: select(keep, a ⊕ b, b) in ONE pass
         through VMEM (the kernel's ``keep`` operand), instead of a
         combine kernel launch followed by a host-graph select."""
-        if m.leaf_op is None:
-            return super().masked_combine(m, keep, lo, hi)
-        from repro.kernels.blelloch_exscan import block_combine
+        se = self._engine()
+        if self.fused:
+            out = se.tree_combine(m, lo, hi, keep=keep,
+                                  block_rows=self.block_rows,
+                                  interpret=self._interpret())
+            if out is not None:
+                return out
+        elif m.leaf_op is not None:
+            interpret = self._interpret()
+            return jax.tree.map(
+                lambda a, b: se.block_combine(
+                    a, b, m.leaf_op, keep=keep,
+                    block_rows=self.block_rows, interpret=interpret),
+                lo, hi)
+        return super().masked_combine(m, keep, lo, hi)
 
-        interpret = self._interpret()
-        return jax.tree.map(
-            lambda a, b: block_combine(
-                a, b, m.leaf_op, keep=keep,
-                block_rows=self.block_rows, interpret=interpret),
-            lo, hi)
+    def exchange_combine(self, m: monoid_lib.Monoid, recv, w, low_side):
+        if self.fused:
+            out = self._engine().tree_exchange(
+                m, recv, w, low_side, block_rows=self.block_rows,
+                interpret=self._interpret())
+            if out is not None:
+                return out
+        return super().exchange_combine(m, recv, w, low_side)
+
+    def scan_reduce_combine(self, m: monoid_lib.Monoid, recv, w,
+                            prefix, low_side):
+        if self.fused:
+            out = self._engine().tree_scan_reduce(
+                m, recv, w, prefix, low_side,
+                block_rows=self.block_rows,
+                interpret=self._interpret())
+            if out is not None:
+                return out
+        return super().scan_reduce_combine(m, recv, w, prefix,
+                                           low_side)
+
+    def prep_combine(self, m: monoid_lib.Monoid, valid, recv, seg,
+                     ident):
+        if self.fused:
+            # one masked-combine pass: valid ? recv ⊕ V[s] : V[s]
+            # (identity absorption folds the fixup select away)
+            return self.masked_combine(m, valid, recv, seg)
+        return super().prep_combine(m, valid, recv, seg, ident)
+
+    def _note_round_kernels(self, st: RoundStep, m: monoid_lib.Monoid):
+        if not self._engine().supports(m):
+            return  # plain-XLA fallback: no kernel accounting
+        _record_kernel(
+            st.kernel_launches(m.commutative, fused=self.fused),
+            st.kernel_passes(m.commutative, fused=self.fused))
 
 
 class SimulatorExecutor(Executor):

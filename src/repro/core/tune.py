@@ -125,8 +125,8 @@ def nnls(A, b, *, max_iter: int | None = None,
 
 def schedule_features(sched: "schedule_lib.Schedule", nbytes: int,
                       op_cost: float = 1.0, *,
-                      commutative: bool = False
-                      ) -> tuple[float, float, float]:
+                      commutative: bool = False,
+                      passes: bool = False) -> tuple:
     """(latency_hops, serial_bytes, op_bytes) counted off the IR.
 
     Mirrors the planner's pricing conventions exactly
@@ -137,7 +137,14 @@ def schedule_features(sched: "schedule_lib.Schedule", nbytes: int,
     combine-order elision the executors and planner apply
     (``Schedule.op_count``) — butterfly exchange 2→1, scan_reduce 3→2
     ⊕ per round — so fitted γ constants price elided schedules
-    consistently."""
+    consistently.
+
+    With ``passes=True`` a fourth regressor is appended —
+    ``pass_bytes``, the fused-path HBM-pass count
+    (``Schedule.kernel_passes``, DESIGN §7) × segment bytes — matching
+    what a nonzero ``CostModel.gamma_pass`` prices.  The default stays
+    the 3-tuple, so the :class:`Sample` schema and the 3-column NNLS
+    design are untouched unless a caller opts in."""
     p = sched.p
     seg = max((st.seg or sched.n_segments for st in sched.steps
                if st.kind == "seg_shift"), default=1)
@@ -152,6 +159,9 @@ def schedule_features(sched: "schedule_lib.Schedule", nbytes: int,
             hops += p - 1
             wire += p * nbytes
     op_bytes = sched.op_count(commutative) * -(-nbytes // seg) * op_cost
+    if passes:
+        pass_bytes = sched.kernel_passes(commutative) * -(-nbytes // seg)
+        return hops, wire, op_bytes, pass_bytes
     return hops, wire, op_bytes
 
 

@@ -1,17 +1,21 @@
-"""Block-tiled exclusive prefix-sum Pallas TPU kernel.
+"""Rank-local exclusive prefix scan — the engine's sum instance.
 
 The on-chip counterpart of the paper's collective: inside one device,
 the "m element" local vectors are scanned along a (possibly long) row
 axis.  TPU adaptation (see DESIGN.md §2): instead of the PRAM Blelloch
-up/down-sweep tree (a GPU-shared-memory idiom), we exploit the fact that
-a Pallas TPU grid executes *sequentially* on a core, so a single VMEM
-scratch register carries the running block total — one pass over HBM,
-work-efficient (each element touched once), with the intra-block scan
-vectorized on the VPU (8x128 lanes) via ``jnp.cumsum``.
+up/down-sweep tree (a GPU-shared-memory idiom), a Pallas TPU grid
+executes *sequentially* on a core, so a single VMEM scratch register
+carries the running block total — one pass over HBM, work-efficient,
+with the intra-block scan vectorized on the VPU.
 
-Grid: one program per row-block.  BlockSpec tiles (block_rows, width)
-into VMEM; width is lane-padded to a multiple of 128 by the ops.py
-wrapper, block_rows chosen so the tile fits comfortably in VMEM.
+Since the single-pass chunked scan engine (``kernels.scan_engine``,
+DESIGN §7) this module is a thin compatibility surface: the cumsum-only
+kernel is gone and :func:`blelloch_exscan` is the engine's add-monoid
+instance (``scan_engine.monoid_exscan`` serves any elementwise monoid
+with the same one-pass kernel).  :func:`block_combine` — the
+``PallasExecutor`` per-round ⊕ hook — also lives in the engine now,
+with identity-valued padding; it is re-exported here for existing
+importers.
 """
 
 from __future__ import annotations
@@ -19,109 +23,10 @@ from __future__ import annotations
 import functools
 
 import jax
-import jax.numpy as jnp
-from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.scan_engine import block_combine, monoid_exscan
 
-def _exscan_kernel(x_ref, o_ref, carry_ref):
-    """One grid step: o = carry + exclusive_cumsum(x); carry += sum(x)."""
-    i = pl.program_id(0)
-
-    @pl.when(i == 0)
-    def _init():
-        carry_ref[...] = jnp.zeros_like(carry_ref)
-
-    x = x_ref[...]
-    incl = jnp.cumsum(x, axis=0)
-    carry = carry_ref[...]
-    o_ref[...] = carry + incl - x  # exclusive within block, shifted by carry
-    carry_ref[...] = carry + incl[-1:, :]
-
-
-def _combine_kernel(op, a_ref, b_ref, o_ref):
-    """One grid step of the block combine: o = a ⊕ b on a VMEM tile."""
-    o_ref[...] = op(a_ref[...], b_ref[...])
-
-
-def _masked_combine_kernel(op, a_ref, b_ref, k_ref, o_ref):
-    """Fused masked combine: o = keep ? a ⊕ b : b, one VMEM pass.
-
-    ``k_ref`` is the (1, 1) keep scalar in SMEM (scalars must be 2D
-    in scalar memory).  The select runs on the combine output inside
-    the tile, so a masked SPMD round (a rank with no source) costs
-    the same single pass as an unmasked one — no separate
-    fixup/select sweeps over HBM."""
-    keep = k_ref[0, 0] != 0
-    a = a_ref[...]
-    b = b_ref[...]
-    o_ref[...] = jnp.where(keep, op(a, b), b)
-
-
-@functools.partial(jax.jit,
-                   static_argnames=("op", "block_rows", "interpret"))
-def block_combine(a: jax.Array, b: jax.Array, op, *,
-                  keep: jax.Array | None = None,
-                  block_rows: int = 256,
-                  interpret: bool = False) -> jax.Array:
-    """Elementwise ⊕ of two same-shape arrays, tiled through VMEM.
-
-    This is the on-chip lowering of a schedule-IR ``RoundStep`` combine
-    (``core.schedule.PallasExecutor``): each communication round's
-    recv ⊕ W runs as a Pallas grid over lane-padded row blocks — the
-    same sequential-grid pattern as the exscan kernel above, but with a
-    caller-supplied elementwise monoid op (``Monoid.leaf_op``) instead
-    of cumsum.
-
-    Args:
-      a, b: same shape/dtype; ``a`` is the low-rank-side operand.
-      op: elementwise jnp function applied to whole VMEM tiles.
-      keep: optional scalar predicate (the SPMD receive mask).  When
-        given, the kernel computes ``keep ? a ⊕ b : b`` fused in one
-        pass — the masked-combine path of a schedule's shift round —
-        instead of a combine kernel plus a separate select sweep.
-    """
-    assert a.shape == b.shape and a.dtype == b.dtype, (a, b)
-    shape = a.shape
-    n = a.size
-    lane = 128
-    flat_a = a.reshape(-1)
-    flat_b = b.reshape(-1)
-    pad = (-n) % lane
-    if pad:
-        flat_a = jnp.pad(flat_a, (0, pad))
-        flat_b = jnp.pad(flat_b, (0, pad))
-    wa = flat_a.reshape(-1, lane)
-    wb = flat_b.reshape(-1, lane)
-    rows = wa.shape[0]
-    br = min(block_rows, rows)
-    rpad = (-rows) % br
-    if rpad:
-        wa = jnp.pad(wa, ((0, rpad), (0, 0)))
-        wb = jnp.pad(wb, ((0, rpad), (0, 0)))
-    grid = (wa.shape[0] // br,)
-    tile = pl.BlockSpec((br, lane), lambda i: (i, 0))
-    if keep is None:
-        out = pl.pallas_call(
-            functools.partial(_combine_kernel, op),
-            grid=grid,
-            in_specs=[tile, tile],
-            out_specs=tile,
-            out_shape=jax.ShapeDtypeStruct(wa.shape, a.dtype),
-            interpret=interpret,
-        )(wa, wb)
-    else:
-        k = jnp.reshape(jnp.asarray(keep, jnp.int32), (1, 1))
-        out = pl.pallas_call(
-            functools.partial(_masked_combine_kernel, op),
-            grid=grid,
-            in_specs=[tile, tile,
-                      pl.BlockSpec(memory_space=pltpu.SMEM)],
-            out_specs=tile,
-            out_shape=jax.ShapeDtypeStruct(wa.shape, a.dtype),
-            interpret=interpret,
-        )(wa, wb, k)
-    return out.reshape(-1)[:n].reshape(shape)
+__all__ = ["block_combine", "blelloch_exscan"]
 
 
 @functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
@@ -135,17 +40,5 @@ def blelloch_exscan(
         multiple of 128 (the ops.py wrapper pads arbitrary shapes).
       block_rows: rows per VMEM tile.
     """
-    n, d = x.shape
-    assert n % block_rows == 0, (n, block_rows)
-    grid = (n // block_rows,)
-    return pl.pallas_call(
-        _exscan_kernel,
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
-        ],
-        out_specs=pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((n, d), x.dtype),
-        scratch_shapes=[pltpu.VMEM((1, d), x.dtype)],
-        interpret=interpret,
-    )(x)
+    return monoid_exscan(x, "add", block_rows=block_rows,
+                         interpret=interpret)

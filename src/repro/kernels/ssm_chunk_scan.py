@@ -1,4 +1,4 @@
-"""Chunked diagonal-SSM scan Pallas TPU kernel.
+"""Chunked diagonal-SSM scan — the engine's affine-monoid instance.
 
 Computes the linear recurrence ``h_t = a_t * h_{t-1} + b_t`` over a long
 token axis (RWKV6 / Mamba-style diagonal state updates).  This is the
@@ -6,14 +6,14 @@ per-device "local chunk scan" half of the context-parallel SSM: the
 cross-device half composes per-device (A, B) chunk summaries with the
 paper's 123-doubling exscan under the AFFINE monoid (core.collectives).
 
-TPU adaptation: sequential grid over time-chunks with the running state
-in VMEM scratch; within a chunk the recurrence is solved with a
-log-depth associative scan on the (a, b) affine pairs, vectorized over
-the state dimension on the VPU.  One HBM pass, no recompute.
-
-Outputs both the full state trajectory and the chunk summary
-(A_total, B_total) with ``h_out = A_total * h_in + B_total`` — the value
-fed to the collective exscan.
+Since the single-pass chunked scan engine (``kernels.scan_engine``,
+DESIGN §7) this module no longer carries its own kernel or its own
+private copy of the affine combine: the recurrence is the engine's
+chunked scan instantiated with ``core.monoid.affine_combine`` (the ONE
+definition, shared with the AFFINE monoid and the model-side XLA
+scans).  The VMEM carry holds the affine pair (∏a so far, h_last), so
+the chunk summary (A_total, B_total) also comes out of the SAME single
+HBM pass — the old second ``prod`` traversal of ``a`` is gone.
 """
 
 from __future__ import annotations
@@ -21,39 +21,11 @@ from __future__ import annotations
 import functools
 
 import jax
-import jax.numpy as jnp
-from jax import lax
-from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.scan_engine import affine_chunk_scan, \
+    affine_chunk_summary
 
-def _affine(lo, hi):
-    a1, b1 = lo
-    a2, b2 = hi
-    return a2 * a1, a2 * b1 + b2
-
-
-def _ssm_kernel(a_ref, b_ref, h0_ref, h_ref, hlast_ref, carry_ref):
-    i = pl.program_id(0)
-
-    @pl.when(i == 0)
-    def _init():
-        carry_ref[...] = h0_ref[...]
-
-    a = a_ref[...]
-    b = b_ref[...]
-    # log-depth scan over the chunk: cum_a[t] = prod a_0..t,
-    # cum_b[t] = state after absorbing steps 0..t with h_{-1}=0.
-    cum_a, cum_b = lax.associative_scan(_affine, (a, b), axis=0)
-    h_in = carry_ref[...]
-    h = cum_a * h_in + cum_b
-    h_ref[...] = h
-    carry_ref[...] = h[-1:, :]
-
-    # on the last chunk, expose the final state
-    @pl.when(i == pl.num_programs(0) - 1)
-    def _final():
-        hlast_ref[...] = h[-1:, :]
+__all__ = ["ssm_chunk_scan", "ssm_chunk_summary"]
 
 
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
@@ -77,27 +49,7 @@ def ssm_chunk_scan(
     T, D = a.shape
     assert a.shape == b.shape and h0.shape == (1, D)
     assert T % chunk == 0, (T, chunk)
-    grid = (T // chunk,)
-    h, h_final = pl.pallas_call(
-        _ssm_kernel,
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((chunk, D), lambda i: (i, 0)),
-            pl.BlockSpec((chunk, D), lambda i: (i, 0)),
-            pl.BlockSpec((1, D), lambda i: (0, 0)),
-        ],
-        out_specs=[
-            pl.BlockSpec((chunk, D), lambda i: (i, 0)),
-            pl.BlockSpec((1, D), lambda i: (0, 0)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((T, D), b.dtype),
-            jax.ShapeDtypeStruct((1, D), b.dtype),
-        ],
-        scratch_shapes=[pltpu.VMEM((1, D), b.dtype)],
-        interpret=interpret,
-    )(a, b, h0)
-    return h, h_final
+    return affine_chunk_scan(a, b, h0, chunk=chunk, interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
@@ -108,13 +60,8 @@ def ssm_chunk_summary(
     whole sequence slice: h_out = A_total * h_in + B_total.
 
     This is the payload of the cross-device exscan (AFFINE monoid).
-    Implemented with the same kernel machinery: scan then take last.
+    One engine pass: the carry's a-leaf chains the per-chunk decay
+    products, so A_total needs no second traversal of ``a``.
     """
-    T, D = a.shape
-    h0 = jnp.zeros((1, D), b.dtype)
-    # A_total = prod(a); B_total = scan with h_in = 0 → h_final.
-    _, b_total = ssm_chunk_scan(a, b, h0, chunk=chunk, interpret=interpret)
-    # product of decays via scan on (a, 0) pairs would need a second pass;
-    # a plain log-depth cumprod of the last row is cheaper:
-    a_total = jnp.prod(a, axis=0, keepdims=True)
-    return a_total, b_total
+    assert a.shape == b.shape and a.dtype == b.dtype
+    return affine_chunk_summary(a, b, chunk=chunk, interpret=interpret)

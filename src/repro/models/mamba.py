@@ -19,17 +19,12 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.core.monoid import affine_combine as _affine
 from repro.models import params as P
 from repro.models.common import rmsnorm
 from repro.sharding.ctx import constrain
 
 SSM_CHUNK = 64
-
-
-def _affine(lo, hi):
-    a1, b1 = lo
-    a2, b2 = hi
-    return a2 * a1, a2 * b1 + b2
 
 
 def ssm_scan_chunked(a, b, h0, chunk=SSM_CHUNK):

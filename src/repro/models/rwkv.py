@@ -18,17 +18,12 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.core.monoid import affine_combine as _affine
 from repro.models.common import rmsnorm, token_shift
 from repro.sharding.ctx import constrain
 
 HEAD_DIM = 64
 WKV_CHUNK = 32
-
-
-def _affine(lo, hi):
-    a1, b1 = lo
-    a2, b2 = hi
-    return a2 * a1, a2 * b1 + b2
 
 
 def _lerp(x, prev, mu):
