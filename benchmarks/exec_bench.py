@@ -52,7 +52,8 @@ import time
 
 DEFAULT_JSON = "BENCH_exec.json"
 PS = (8, 64, 256)
-ALGS = ("123", "1doubling", "two_op", "native", "ring")
+ALGS = ("123", "1doubling", "two_op", "native", "ring",
+        "halving", "quartering", "reduce_scatter")
 PAYLOAD_ELEMS = 256  # int64 -> 2 KiB per rank
 TRACE_EQ_BUDGET = 256  # p=256 rolled-ring trace ceiling (measured: ~92)
 MIN_ROLLED_WIN = 5.0  # acceptance floor for unrolled/rolled eq ratio

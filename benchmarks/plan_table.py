@@ -59,6 +59,14 @@ SMALL_MS = (8, 64)
 # crossover search range: the smallest m where the ring beats 123
 CROSSOVER_LO, CROSSOVER_HI = 8, 1 << 26
 
+# winner-map m ladder (powers of two): the per-band winner table
+# sweeps "auto" over these and collapses equal neighbours into bands
+WINNER_MS = tuple(1 << e for e in range(3, 27))  # 8 B .. 64 MiB
+
+# the mid-m band builders this PR adds (gated in --check: each tier
+# must show at least one p where one of them wins a band)
+NEW_ALGS = ("halving", "quartering", "reduce_scatter")
+
 # composed multi-axis cells: (major, minor) rank grids
 PS_2D = ((2, 8), (2, 36), (4, 64))
 MS_2D = (8, 65_536)
@@ -91,29 +99,61 @@ def _tiers(active):
             active.tiers]
 
 
-def crossover_m(p: int, cm, lo: int = CROSSOVER_LO,
-                hi: int = CROSSOVER_HI):
-    """Smallest payload m (bytes) where the segmented ring's best plan
-    costs less than 123-doubling under ``cm`` (binary search on the
-    monotone α/β trade-off), or None if 123 holds through ``hi``."""
-    ring = ScanSpec(kind="exclusive", monoid="add", algorithm="ring")
-    s123 = ScanSpec(kind="exclusive", monoid="add", algorithm="123")
+def crossover_m(p: int, cm, algo_a: str = "123", algo_b: str = "ring",
+                lo: int = CROSSOVER_LO, hi: int = CROSSOVER_HI):
+    """Smallest payload m (bytes) in [lo, hi] where ``algo_b``'s best
+    plan costs less than ``algo_a``'s under ``cm`` (binary search on
+    the monotone α/β trade-off), for ANY registered algorithm pair.
 
-    def ring_wins(m: int) -> bool:
-        return plan(ring, p=p, nbytes=m, cost_model=cm).cost < \
-            plan(s123, p=p, nbytes=m, cost_model=cm).cost
+    Returns ``(m_star, qualifier)``: qualifier ``""`` marks an
+    interior crossover (m_star is real); ``"<="`` means algo_b
+    already wins at ``lo`` (the true crossover is at or below the
+    range floor); ``">"`` means algo_a still wins at ``hi`` (no
+    crossover in range — which is a legitimate answer when the pair's
+    asymptotic byte slopes never cross, e.g. ring vs reduce_scatter
+    at large p under the planner's segment cap).  Callers must
+    surface the qualifier instead of reporting a saturated boundary
+    as if it were a measured crossover."""
+    sa = ScanSpec(kind="exclusive", monoid="add", algorithm=algo_a)
+    sb = ScanSpec(kind="exclusive", monoid="add", algorithm=algo_b)
 
-    if ring_wins(lo):
-        return lo
-    if not ring_wins(hi):
-        return None
+    def b_wins(m: int) -> bool:
+        return plan(sb, p=p, nbytes=m, cost_model=cm).cost < \
+            plan(sa, p=p, nbytes=m, cost_model=cm).cost
+
+    if b_wins(lo):
+        return lo, "<="
+    if not b_wins(hi):
+        return hi, ">"
     while lo + 1 < hi:
         mid = (lo + hi) // 2
-        if ring_wins(mid):
+        if b_wins(mid):
             hi = mid
         else:
             lo = mid
-    return hi
+    return hi, ""
+
+
+def _fmt_crossover(m_star: int, qualifier: str):
+    """Row value: the bare integer for a real crossover, '<=LO' /
+    '>HI' for a saturated search (never a silently clamped number)."""
+    return f"{qualifier}{m_star}" if qualifier else m_star
+
+
+def winner_map(p: int, cm):
+    """Contiguous (m_lo, m_hi, algorithm) bands of the "auto" winner
+    over the ``WINNER_MS`` ladder — the per-band winner table the
+    mid-m story is measured by.  m_hi is the last ladder point the
+    band holds (the final band extends beyond the ladder)."""
+    spec = ScanSpec(kind="exclusive", monoid="add", algorithm="auto")
+    bands: list = []
+    for m in WINNER_MS:
+        alg = plan(spec, p=p, nbytes=m, cost_model=cm).algorithm
+        if bands and bands[-1][2] == alg:
+            bands[-1] = (bands[-1][0], m, alg)
+        else:
+            bands.append((m, m, alg))
+    return bands
 
 
 def run(csv_rows: list, check: bool = False, profile=None):
@@ -158,18 +198,61 @@ def run(csv_rows: list, check: bool = False, profile=None):
                 if not res["ok"]:
                     drift.append((key, res))
     # paper-style crossover table: smallest m where the segmented ring
-    # beats 123-doubling, measured (active profile) vs modeled
+    # beats 123-doubling, measured (active profile) vs modeled — now
+    # with explicit saturation qualifiers instead of silent clamping
     for tier, cm, cm_default in tiers:
         for p in PS:
             key = f"crossover/{tier}/p{p}"
-            m_star = crossover_m(p, cm)
-            m_model = crossover_m(p, cm_default)
+            m_star, q_act = crossover_m(p, cm)
+            m_model, q_mod = crossover_m(p, cm_default)
             csv_rows.append((key + "/m_star",
-                             "none" if m_star is None else m_star,
+                             _fmt_crossover(m_star, q_act),
                              "min_m_ring_beats_123"))
             csv_rows.append((key + "/m_star_modeled",
-                             "none" if m_model is None else m_model,
+                             _fmt_crossover(m_model, q_mod),
                              "min_m_ring_beats_123_default"))
+    # per-band winner map (the mid-m payoff, measured not asserted):
+    # the "auto" winner over the WINNER_MS ladder, collapsed into
+    # bands, under the active ("") and default ("_modeled") pricing;
+    # each adjacent band pair gets a binary-searched crossover whose
+    # range is the two band edges — saturation there means the sweep
+    # and the search disagree, a drift failure, never a clamped cell
+    new_band_cells: dict = {}
+    for tier, cm, cm_default in tiers:
+        for which, kernel in (("", cm), ("_modeled", cm_default)):
+            for p in PS:
+                bands = winner_map(p, kernel)
+                key = f"winner_map{which}/{tier}/p{p}"
+                csv_rows.append((
+                    key + "/bands",
+                    " ".join(f"{alg}:{mlo}..{mhi}"
+                             for mlo, mhi, alg in bands),
+                    "auto_winner_per_m_band"))
+                for (_, ahi, a), (blo, _, b) in zip(bands, bands[1:]):
+                    m_star, qual = crossover_m(p, kernel, a, b,
+                                               lo=ahi, hi=blo)
+                    ckey = f"{key}/crossover/{a}-to-{b}"
+                    csv_rows.append((ckey,
+                                     _fmt_crossover(m_star, qual),
+                                     "min_m_next_band_wins"))
+                    if qual:
+                        drift.append((ckey, {
+                            "saturated": f"{qual}{m_star}",
+                            "range": (ahi, blo)}))
+                if {alg for _, _, alg in bands} & set(NEW_ALGS):
+                    new_band_cells[(which, tier)] = \
+                        new_band_cells.get((which, tier), 0) + 1
+    # --check gate: every tier must have at least one p where a new
+    # mid-m builder wins a band, under BOTH active and default pricing
+    for tier, _, _ in tiers:
+        for which in ("", "_modeled"):
+            n = new_band_cells.get((which, tier), 0)
+            csv_rows.append((f"winner_map{which}/{tier}/new_alg_cells",
+                             n, "cells_where_mid_m_builder_wins"))
+            if n == 0:
+                drift.append((f"winner_map{which}/{tier}",
+                              {"new_alg_cells": 0, "want": ">=1",
+                               "new_algs": NEW_ALGS}))
     # pinned small-m decisions: wherever the default profile picks the
     # paper's 123-doubling, a fitted profile must not flip it
     for tier, cm, cm_default in tiers:

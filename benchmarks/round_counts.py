@@ -37,6 +37,40 @@ def run(csv_rows: list, check: bool = False):
             csv_rows.append((f"ops/{alg}/p{p}", st.result_path_ops,
                              "oplus_result_path"))
     drift = []
+    # block-distributed mid-m builders: closed-form rounds
+    # (oracle.rounds_*) vs the IR vs the simulator-executed schedule —
+    # the row-splitting algorithms can't run on the free monoid, so
+    # they verify through verify_plan (numerics + stats) instead of
+    # oracle.verify, with the closed form drift-checked explicitly
+    closed = {"halving": oracle.rounds_halving,
+              "quartering": oracle.rounds_quartering,
+              "reduce_scatter": oracle.rounds_reduce_scatter}
+    for p in PS:
+        for alg, form in closed.items():
+            pl = plan(ScanSpec(kind="exclusive", algorithm=alg),
+                      p=p, nbytes=64)
+            key = f"rounds/{alg}/p{p}"
+            csv_rows.append((key, pl.rounds, "rounds_predicted"))
+            csv_rows.append((key + "_closed", form(p), "closed_form"))
+            if pl.rounds != form(p):
+                drift.append((key, {"plan": pl.rounds,
+                                    "closed_form": form(p)}))
+            if p <= 64:  # simulator-executed for moderate p
+                res = schedule_lib.verify_plan(pl)
+                csv_rows.append((key + "_measured",
+                                 res["rounds_measured"],
+                                 "simulator_executor"))
+                if not res["ok"]:
+                    drift.append((key, res))
+        # the reduce-scatter depth law the paper cites:
+        # 2⌈log₂p⌉ rounds at powers of two
+        if p & (p - 1) == 0:
+            want = 2 * (p.bit_length() - 1)
+            if oracle.rounds_reduce_scatter(p) != want:
+                drift.append((f"rounds/reduce_scatter/p{p}",
+                              {"closed_form":
+                               oracle.rounds_reduce_scatter(p),
+                               "2ceil_log2_p": want}))
     for p in RING_PS:
         for S in RING_SS:
             pl = plan(ScanSpec(kind="exclusive", algorithm="ring",

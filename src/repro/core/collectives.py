@@ -77,6 +77,19 @@ register_algorithm("two_op", kind="exclusive")(schedule_lib.build_two_op)
 register_algorithm("native", kind="exclusive")(schedule_lib.build_native)
 register_algorithm("ring", kind="exclusive",
                    segmentable=True)(schedule_lib.build_ring)
+# Block-distributed exscan family (mid-m band): vector-halving /
+# quartering (Träff-2026 exclusive-scan variants) and the full
+# reduce-scatter-depth exscan (Rabenseifner-style halving/doubling:
+# ~2·(p−1)/p·m wire bytes in 2⌈log₂p⌉ rounds).  They split payload
+# leaves into row blocks, so the monoid must be segmentable.
+register_algorithm("halving", kind="exclusive",
+                   requires_segmentable=True)(schedule_lib.build_halving)
+register_algorithm(
+    "quartering", kind="exclusive",
+    requires_segmentable=True)(schedule_lib.build_quartering)
+register_algorithm(
+    "reduce_scatter", kind="exclusive",
+    requires_segmentable=True)(schedule_lib.build_reduce_scatter)
 register_algorithm("hillis_steele",
                    kind="inclusive")(schedule_lib.build_hillis_steele)
 register_algorithm("butterfly",
@@ -109,6 +122,15 @@ register_algorithm("native", kind="scan_total")(
     _total_variant(schedule_lib.build_native))
 register_algorithm("ring", kind="scan_total", segmentable=True)(
     _total_variant(schedule_lib.build_ring))
+register_algorithm("halving", kind="scan_total",
+                   requires_segmentable=True)(
+    _total_variant(schedule_lib.build_halving))
+register_algorithm("quartering", kind="scan_total",
+                   requires_segmentable=True)(
+    _total_variant(schedule_lib.build_quartering))
+register_algorithm("reduce_scatter", kind="scan_total",
+                   requires_segmentable=True)(
+    _total_variant(schedule_lib.build_reduce_scatter))
 register_algorithm("fused_doubling",
                    kind="scan_total")(schedule_lib.build_scan_total)
 
@@ -177,6 +199,9 @@ def allreduce(x, axis_name: str, m="add"):
 q_123 = oracle.q_123
 rounds_1doubling = oracle.rounds_1doubling
 rounds_two_op = oracle.rounds_two_op
+rounds_halving = oracle.rounds_halving
+rounds_quartering = oracle.rounds_quartering
+rounds_reduce_scatter = oracle.rounds_reduce_scatter
 
 
 def expected_rounds(algorithm: str, p: int, *,

@@ -68,6 +68,43 @@ def rounds_two_op(p: int) -> int:
     return math.ceil(math.log2(p))
 
 
+def _block_params(p: int, depth: int) -> tuple[int, int, int]:
+    """(t, rho, n_w) of the block-distributed exscan family.
+
+    ``t`` is the effective halving depth (clamped to ⌊log₂p⌋), ``rho``
+    the number of folded pairs (p mod 2^t), ``n_w`` the window count
+    the mid-phase two-⊕ exscan runs over.
+    """
+    t = max(1, min(depth, p.bit_length() - 1))
+    rho = p % (1 << t)
+    return t, rho, (p - rho) >> t
+
+
+def rounds_block(p: int, depth: int) -> int:
+    """Closed-form round count of the block-distributed exscan family:
+    (2 if p mod 2^t else 0) fold/unfold + 2t halving/doubling +
+    ⌈log₂ n_w⌉ mid-phase rounds."""
+    if p <= 1:
+        return 0
+    t, rho, n_w = _block_params(p, depth)
+    return (2 if rho else 0) + 2 * t + rounds_two_op(n_w)
+
+
+def rounds_halving(p: int) -> int:
+    return rounds_block(p, 1)
+
+
+def rounds_quartering(p: int) -> int:
+    return rounds_block(p, 2)
+
+
+def rounds_reduce_scatter(p: int) -> int:
+    """Full vector-halving depth: 2⌈log₂p⌉ rounds at power-of-two p."""
+    if p <= 1:
+        return 0
+    return rounds_block(p, p.bit_length())
+
+
 def skips_123(p: int) -> list[int]:
     """The 123-doubling skip schedule s_0=1, s_1=2, s_k=3*2^(k-2)."""
     if p <= 1:

@@ -109,25 +109,38 @@ class CostModel:
 
     def parts(self, *, hops: int, serial_bytes: float, ops: int,
               payload_bytes: int, op_cost: float = 1.0,
-              passes: int = 0) -> dict:
+              passes: int = 0, op_bytes: float = -1.0,
+              pass_bytes: float = -1.0) -> dict:
         """The three cost components, separately (``explain()`` uses
         them to say *why* a candidate lost).  ``passes`` — the plan's
         HBM-pass count — folds into the γ component when
-        ``gamma_pass`` is nonzero (it prices memory traffic, like γ)."""
+        ``gamma_pass`` is nonzero (it prices memory traffic, like γ).
+
+        ``op_bytes`` / ``pass_bytes`` (when >= 0) override the uniform
+        ``ops·payload_bytes`` / ``passes·payload_bytes`` products with
+        the schedule's exact per-step byte laws — needed by the
+        block-distributed algorithms whose ⊕ rounds each touch a
+        different slice of the payload (``schedule.op_wire_bytes``)."""
+        gamma_op = (op_bytes if op_bytes >= 0
+                    else ops * payload_bytes)
+        gamma_mem = (pass_bytes if pass_bytes >= 0
+                     else passes * payload_bytes)
         return {
             "alpha": self.alpha * hops,
             "beta": self.beta * serial_bytes,
-            "gamma": self.gamma * ops * payload_bytes * op_cost
-            + self.gamma_pass * passes * payload_bytes,
+            "gamma": self.gamma * gamma_op * op_cost
+            + self.gamma_pass * gamma_mem,
         }
 
     def cost(self, *, hops: int, serial_bytes: float, ops: int,
              payload_bytes: int, op_cost: float = 1.0,
-             passes: int = 0) -> float:
+             passes: int = 0, op_bytes: float = -1.0,
+             pass_bytes: float = -1.0) -> float:
         return sum(self.parts(
             hops=hops, serial_bytes=serial_bytes, ops=ops,
             payload_bytes=payload_bytes, op_cost=op_cost,
-            passes=passes).values())
+            passes=passes, op_bytes=op_bytes,
+            pass_bytes=pass_bytes).values())
 
 
 DEFAULT_COST_MODEL = CostModel()
@@ -357,6 +370,12 @@ class ScanAlgorithm:
     kind: str  # "exclusive" | "inclusive" | "allreduce"
     build: Callable[..., "schedule_lib.Schedule"]
     segmentable: bool = False
+    # Block-distributed algorithms split payload leaves into row
+    # blocks, so the monoid's ⊕ must act elementwise over aligned
+    # positions (Monoid.segmentable) even though the *schedule* takes
+    # no segment parameter.  "auto" skips them for non-segmentable
+    # monoids (matmul); pinning one raises.
+    requires_segmentable: bool = False
 
     def schedule(self, p: int,
                  segments: int = 1) -> "schedule_lib.Schedule":
@@ -379,7 +398,8 @@ KINDS = ("exclusive", "inclusive", "allreduce", "scan_total")
 
 
 def register_algorithm(name: str, *, kind: str,
-                       segmentable: bool = False):
+                       segmentable: bool = False,
+                       requires_segmentable: bool = False):
     """Decorator registering a schedule builder as a scan algorithm.
 
     Usage (collectives.py)::
@@ -400,7 +420,8 @@ def register_algorithm(name: str, *, kind: str,
             raise ValueError(f"algorithm {name!r} already registered "
                              f"for kind {kind!r}")
         _REGISTRY[key] = ScanAlgorithm(
-            name=name, kind=kind, build=build, segmentable=segmentable)
+            name=name, kind=kind, build=build, segmentable=segmentable,
+            requires_segmentable=requires_segmentable)
         return build
 
     return deco
@@ -534,6 +555,12 @@ class ScanPlan:
     segments: int = 1
     sub_plans: tuple = ()
     kernel_passes: int = 0
+    # Exact γ-term byte laws off the schedule IR (Σ over ⊕-steps /
+    # HBM passes of the bytes each one touches); -1 falls back to the
+    # uniform ops·⌈m/S⌉ product, which they equal for every uniform
+    # (non-block) schedule.
+    op_bytes: float = -1.0
+    pass_bytes: float = -1.0
 
     def schedule(self) -> "schedule_lib.Schedule":
         """The executable round-by-round IR of this plan (cached).
@@ -601,7 +628,8 @@ class ScanPlan:
             hops=self.rounds + (self.p - 1) * self.allgathers,
             serial_bytes=self.bytes_on_wire, ops=self.op_applications,
             payload_bytes=seg_bytes, op_cost=op_cost,
-            passes=self.kernel_passes)
+            passes=self.kernel_passes, op_bytes=self.op_bytes,
+            pass_bytes=self.pass_bytes)
 
     def explain(self) -> tuple:
         """The runner-up table: every candidate algorithm's predicted
@@ -705,8 +733,17 @@ def _candidate_plans(spec: ScanSpec, p: int, nbytes: int,
         ops = sched.op_count(mono.commutative)
         ag = sched.allgathers
         seg_bytes = -(-nbytes // S) if nbytes else 0
-        wire = rounds * seg_bytes + ag * p * nbytes
+        # per-step byte laws off the IR (DESIGN §7): for uniform
+        # schedules these reduce to rounds·⌈m/S⌉ / ops·⌈m/S⌉ exactly;
+        # block-distributed schedules shrink per-round payloads, which
+        # is where their 2·(p−1)/p·m wire total comes from
+        wire = (schedule_lib.wire_bytes(sched, nbytes)
+                + ag * p * nbytes)
+        op_bytes = schedule_lib.op_wire_bytes(sched, nbytes,
+                                              mono.commutative)
         passes = sched.kernel_passes(mono.commutative)
+        pass_bytes = schedule_lib.pass_wire_bytes(sched, nbytes,
+                                                  mono.commutative)
         return ScanPlan(
             spec=spec, p=p, algorithm=algo.name, payload_bytes=nbytes,
             rounds=rounds, op_applications=ops, allgathers=ag,
@@ -714,10 +751,19 @@ def _candidate_plans(spec: ScanSpec, p: int, nbytes: int,
             cost=cm.cost(hops=rounds + (p - 1) * ag,
                          serial_bytes=wire, ops=ops,
                          payload_bytes=seg_bytes, op_cost=op_cost,
-                         passes=passes),
-            cost_model=cm, segments=S, kernel_passes=passes)
+                         passes=passes, op_bytes=op_bytes,
+                         pass_bytes=pass_bytes),
+            cost_model=cm, segments=S, kernel_passes=passes,
+            op_bytes=op_bytes, pass_bytes=pass_bytes)
 
     def candidates(algo: ScanAlgorithm) -> list[ScanPlan]:
+        if algo.requires_segmentable and not mono.segmentable:
+            if spec.algorithm != "auto":
+                raise ValueError(
+                    f"algorithm {algo.name!r} splits the payload into "
+                    f"row blocks and requires a segmentable monoid; "
+                    f"monoid {mono.name!r} is not")
+            return []
         if not (algo.segmentable and mono.segmentable):
             if spec.segments not in (None, 1) and spec.algorithm != "auto":
                 raise ValueError(
@@ -813,7 +859,11 @@ def _plan_impl(spec: ScanSpec, ps: tuple, nbytes: int,
         bytes_on_wire=sum(s.bytes_on_wire for s in subs),
         cost=sum(s.cost for s in subs) + cm_top.gamma * nbytes * op_cost,
         cost_model=cm_top, sub_plans=subs,
-        kernel_passes=sum(s.kernel_passes for s in subs))
+        kernel_passes=sum(s.kernel_passes for s in subs),
+        op_bytes=(sum(s.op_bytes for s in subs)
+                  if all(s.op_bytes >= 0 for s in subs) else -1.0),
+        pass_bytes=(sum(s.pass_bytes for s in subs)
+                    if all(s.pass_bytes >= 0 for s in subs) else -1.0))
 
 
 _plan_cached = functools.lru_cache(maxsize=PLAN_CACHE_MAXSIZE)(_plan_impl)

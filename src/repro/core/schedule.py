@@ -204,6 +204,22 @@ class RoundStep:
       "exchange"    — butterfly ppermute r ↔ r^skip; two
                       order-preserving combines selected by the rank's
                       side bit.
+      "block_exchange" — one round of the block-distributed exscan
+                      family (halving/quartering/reduce_scatter): the
+                      payload is split into ``seg`` = 2^t rows and the
+                      round moves ``rows`` of them (the per-round byte
+                      law ``rows · ceil(m/seg)`` the planner prices).
+                      ``phase`` narrows the semantics: "fold" pairs off
+                      the p mod 2^t surplus ranks, "up" halves the
+                      owned row range against virtual partner v^skip
+                      (saving both pre-combine halves for the down
+                      sweep), "mid" runs a two-⊕ exscan over the
+                      2^t-aligned windows on each rank's single owned
+                      row, "down" doubles the row range back while
+                      turning window prefixes into rank prefixes, and
+                      "unfold" returns the folded pairs' results.
+                      ``bound`` carries the fold count ρ, ``t`` the
+                      phase round index.
       "scan_reduce" — fused exscan+allreduce butterfly round: exchange
                       the window total T with r^skip while the lower
                       side also folds the received total into the
@@ -245,12 +261,14 @@ class RoundStep:
     reg: str = ""  # stage save / merge source / scan_reduce prefix reg
     src: str = ""  # stage: "w" rebinds X ← W
     init: str = "identity"  # stage: new W ("identity"|"x"|"w"|register)
+    phase: str = ""  # block_exchange: fold|up|mid|down|unfold
+    rows: int = 0  # block_exchange: payload rows this round moves
 
     @property
     def is_round(self) -> bool:
         """Does this step cost one ppermute communication round?"""
         return self.kind in ("shift", "seg_shift", "exchange",
-                             "scan_reduce")
+                             "scan_reduce", "block_exchange")
 
     @property
     def ops(self) -> int:
@@ -277,6 +295,20 @@ class RoundStep:
             n += 1 if commutative else 2
         elif self.kind == "scan_reduce":
             n += 2 if commutative else 3
+        elif self.kind == "block_exchange":
+            if self.phase in ("fold", "unfold"):
+                n += 1  # the folded pair's single combine
+            elif self.phase == "up":
+                # exchange-shaped: commutative elides the second order
+                n += 1 if commutative else 2
+            elif self.phase == "mid":
+                # copy round carries no ⊕; later rounds prep the send
+                # (P ⊕ T) and fold the received window prefix
+                n += 0 if self.combine == "copy" else 2
+            elif self.phase == "down":
+                # lower half preps P ⊕ O_j, upper half adjusts P ⊕ S_j
+                # (different operands: no commutative elision)
+                n += 2
         elif self.kind == "fold":
             n += self.fold_count
         elif self.kind == "merge":
@@ -312,6 +344,24 @@ class RoundStep:
             if fused:
                 return 1  # (P, T) pair batched into one launch
             return 2 if commutative else 5  # 3 launches + 2 selects
+        if self.kind == "block_exchange":
+            if self.phase in ("fold", "unfold"):
+                # one masked combine; baseline pays the mask select
+                return 1 if fused else 2
+            if self.phase == "up":
+                if commutative:
+                    return 1
+                return 1 if fused else 3  # 2 orders + side select
+            if self.phase == "mid":
+                if self.combine == "copy":
+                    return 0
+                # prep combine + masked window combine (baseline pays
+                # the window-mask select on the second)
+                return 2 if fused else 3
+            # down: two combines plus the side/adjust selects stay in
+            # the host graph — no fused down-round kernel, both modes
+            # sweep the half-payload four times
+            return 4
         if self.kind == "fold":
             return self.fold_count
         if self.kind == "merge":
@@ -334,6 +384,14 @@ class RoundStep:
             if fused:
                 return 1
             return 2 if commutative else 3
+        if self.kind == "block_exchange":
+            if self.phase in ("fold", "unfold"):
+                return 1
+            if self.phase == "up":
+                return 1 if (commutative or fused) else 2
+            if self.phase == "mid":
+                return 0 if self.combine == "copy" else 2
+            return 2  # down: prep + adjust combines
         if self.kind == "fold":
             return self.fold_count
         if self.kind == "merge":
@@ -356,6 +414,18 @@ class RoundStep:
         if self.kind == "scan_reduce":
             return (f"scrd  r↔r^{self.skip}  T←ordered(recv,T); "
                     f"low: P←recv⊕P{at}")
+        if self.kind == "block_exchange":
+            what = {
+                "fold": "pair 2i→2i+1: Y←recv⊕V",
+                "up": f"v↔v^{self.skip}: keep/swap half rows",
+                "mid": ("window copy P←T[w−1]"
+                        if self.combine == "copy"
+                        else f"w→w+{self.skip}: P←recv⊕P"),
+                "down": f"v↔v^{self.skip}: widen P, low sends P⊕O",
+                "unfold": "pair 2i+1→2i: return E; odd: P⊕lo",
+            }[self.phase]
+            return (f"blk   {self.phase:<6s} rows={self.rows}/"
+                    f"{self.seg}  {what}{at}")
         if self.kind == "allgather":
             return f"all-gather V{at}"
         if self.kind == "fold":
@@ -457,6 +527,75 @@ def _segs(S: int) -> tuple[Segment, ...]:
 
 
 # ---------------------------------------------------------------------------
+# Per-round byte laws, priced off the IR.  The planner, the calibration
+# features and ``expected_round_bytes`` all read these, so a schedule
+# whose rounds move less than the full payload (the segmented ring's
+# m/S segments, the block family's row slices) is priced exactly as the
+# executors transmit it.
+# ---------------------------------------------------------------------------
+
+
+def step_wire_bytes(st: RoundStep, nbytes: int,
+                    default_seg: int = 1) -> int:
+    """Bytes one round of ``st`` puts on the wire for an ``nbytes``
+    payload: a ceil(m/S) segment per pipelined ring round,
+    rows·ceil(m/2^t) for a block-exchange round, the full payload
+    otherwise.  Non-round steps move nothing here (all-gathers are
+    priced separately, as in ``ScanPlan.bytes_on_wire``)."""
+    if not st.is_round:
+        return 0
+    if st.kind == "seg_shift":
+        return -(-nbytes // (st.seg or default_seg))
+    if st.kind == "block_exchange":
+        return st.rows * -(-nbytes // st.seg)
+    return nbytes
+
+
+def wire_bytes(sched: "Schedule", nbytes: int) -> int:
+    """Total round wire bytes of the schedule under the per-round law
+    (excluding all-gather traffic)."""
+    return sum(step_wire_bytes(st, nbytes, sched.n_segments)
+               for st in sched.steps)
+
+
+def op_wire_bytes(sched: "Schedule", nbytes: int,
+                  commutative: bool = False) -> int:
+    """⊕-traffic bytes: each step's ⊕ count times the bytes one of its
+    ⊕ touches.  For uniform schedules this equals
+    ``op_count · ceil(m/S)`` (the legacy planner law); block-exchange
+    steps combine only the rows they move."""
+    seg = _max_seg(sched)
+    total = 0
+    for st in sched.steps:
+        n = st.op_count(commutative)
+        if not n:
+            continue
+        if st.kind == "block_exchange":
+            total += n * st.rows * -(-nbytes // st.seg)
+        else:
+            total += n * -(-nbytes // seg)
+    return total
+
+
+def pass_wire_bytes(sched: "Schedule", nbytes: int,
+                    commutative: bool = False, *,
+                    fused: bool = True) -> int:
+    """Kernel-pass traffic bytes (the gamma_pass cost-model term):
+    each step's HBM passes times the bytes one pass sweeps."""
+    seg = _max_seg(sched)
+    total = 0
+    for st in sched.steps:
+        n = st.kernel_passes(commutative, fused=fused)
+        if not n:
+            continue
+        if st.kind == "block_exchange":
+            total += n * st.rows * -(-nbytes // st.seg)
+        else:
+            total += n * -(-nbytes // seg)
+    return total
+
+
+# ---------------------------------------------------------------------------
 # Builders: one per registered algorithm.  The planner counts rounds/⊕/
 # all-gathers off these schedules, so by construction plans predict what
 # the executors measure.
@@ -535,6 +674,83 @@ def build_ring(p: int, segments: int = 1) -> Schedule:
                   for t in range(n))
     return Schedule("ring", "exclusive", p, segments=_segs(S),
                     steps=steps)
+
+
+def _build_block(name: str, p: int, depth: int) -> Schedule:
+    """The block-distributed exscan family (vector halving/doubling).
+
+    The payload is split into R = 2^t elementwise rows
+    (t = min(depth, ⌊log₂p⌋)) and the scan runs in five phases over
+    M = p − ρ *virtual* ranks (ρ = p mod 2^t surplus ranks pair off in
+    a fold pre-round and rejoin in an unfold post-round):
+
+      up    — t butterfly rounds halve each rank's owned row range
+              against virtual partner v^2^k, so after round k every
+              2^(k+1)-rank window's fold is block-distributed over it;
+      mid   — a two-⊕ exscan over the M/2^t windows, each rank
+              carrying only its single owned row;
+      down  — t rounds double the row range back, converting window
+              prefixes into per-rank exclusive prefixes: the lower
+              sibling sends P ⊕ O_k (its saved pre-combine half), the
+              upper adjusts its own rows by the saved received half.
+
+    Round/byte laws (power-of-two p): 2(1−2^−t)·m + (q−t)/2^t·m wire
+    bytes over q+t rounds (q = ⌈log₂p⌉) — t=1 ≈ (q+1)/2·m in q+1
+    rounds, t=2 ≈ (q+4)/4·m in q+2, t=q ≈ 2(1−1/p)·m in 2q rounds —
+    a graded ladder between the doubling schedules (q·m) and the
+    segmented ring (→m as S grows).  ρ≠0 adds the fold/unfold round
+    pair.  Rows combine elementwise, so these schedules require a
+    segmentable monoid (like :func:`segment`)."""
+    steps: list[RoundStep] = []
+    if p >= 2:
+        t = max(1, min(depth, p.bit_length() - 1))
+        R = 1 << t
+        rho = p % R
+        n_w = (p - rho) >> t
+        common = dict(seg=R, bound=rho)
+        if rho:
+            steps.append(RoundStep("block_exchange", phase="fold",
+                                   rows=R, skip=1, t=0, **common))
+        for k in range(t):
+            steps.append(RoundStep("block_exchange", phase="up",
+                                   rows=R >> (k + 1), skip=1 << k, t=k,
+                                   **common))
+        if n_w >= 2:
+            steps.append(RoundStep("block_exchange", phase="mid",
+                                   rows=1, skip=1, t=0, combine="copy",
+                                   **common))
+            i = 1
+            while (1 << i) < n_w:
+                steps.append(RoundStep("block_exchange", phase="mid",
+                                       rows=1, skip=1 << i, t=i,
+                                       combine="op", **common))
+                i += 1
+        for j in reversed(range(t)):
+            steps.append(RoundStep("block_exchange", phase="down",
+                                   rows=R >> (j + 1), skip=1 << j, t=j,
+                                   **common))
+        if rho:
+            steps.append(RoundStep("block_exchange", phase="unfold",
+                                   rows=R, skip=1, t=0, **common))
+    return Schedule(name, "exclusive", p, steps=tuple(steps))
+
+
+def build_halving(p: int) -> Schedule:
+    """Träff-2026 exclusive scan, depth-1 halving: ⌈log₂p⌉+1 rounds
+    (power-of-two p) of ≈(⌈log₂p⌉+1)/2·m total wire bytes."""
+    return _build_block("halving", p, 1)
+
+
+def build_quartering(p: int) -> Schedule:
+    """Träff-2026 exclusive scan, depth-2 quartering: ⌈log₂p⌉+2
+    rounds (power-of-two p) of ≈(⌈log₂p⌉+4)/4·m total wire bytes."""
+    return _build_block("quartering", p, 2)
+
+
+def build_reduce_scatter(p: int) -> Schedule:
+    """Full-depth reduce-scatter (vector halving/doubling) exscan:
+    2⌈log₂p⌉ rounds of ≈2·(p−1)/p·m total wire bytes."""
+    return _build_block("reduce_scatter", p, max(1, p.bit_length()))
 
 
 def build_hillis_steele(p: int) -> Schedule:
@@ -941,7 +1157,7 @@ def _np_unsplit(seg, like):
 # ---------------------------------------------------------------------------
 
 
-_STATEFUL = ("seg_shift", "scan_reduce")
+_STATEFUL = ("seg_shift", "scan_reduce", "block_exchange")
 
 
 def _stage_runs(steps):
@@ -1144,6 +1360,8 @@ class SPMDExecutor(Executor):
                 w, prefix = self._run_scan_reduce(run, x, w, m, axis, p)
                 if run[-1].reg:
                     regs[run[-1].reg] = prefix
+            elif run[0].kind == "block_exchange":
+                w = self._run_block(run, x, m, axis, p)
             else:
                 w = self._run_steps(run, x, w, m, axis, p)
         outs = tuple(w if o == "$w" else regs[o]
@@ -1316,6 +1534,126 @@ class SPMDExecutor(Executor):
         (_, pend, pvalid, pslot, R), _ = lax.scan(body, init, ts)
         R = store(R, pend, pvalid, pslot)  # drain the last round
         return jax.tree.map(_jnp_unsplit, R, x)
+
+    def _run_block(self, steps, x, m, axis, p):
+        """The block-distributed exscan family (see
+        :func:`_build_block`).  The payload lives split into R = 2^t
+        rows; per-rank row offsets are traced, so each phase round is
+        one static ``ppermute`` over the M virtual ranks' physical
+        representatives plus static-size dynamic row slices — O(log p)
+        trace sites, like the other doubling chains.  Surplus ranks
+        (the fold's even partners) idle through the core phases: they
+        are in no permutation, and their locally-computed garbage is
+        never observed."""
+        r = lax.axis_index(axis)
+        st0 = steps[0]
+        R = st0.seg
+        t_eff = R.bit_length() - 1
+        rho = st0.bound
+        M = p - rho
+        reps = [2 * u + 1 if u < rho else u + rho for u in range(M)]
+        Y = jax.tree.map(lambda a: _jnp_split(a, R), x)
+        v = jnp.where(r < 2 * rho, r // 2, r - rho)
+        folded = r < 2 * rho
+        odd_folded = folded & (r % 2 == 1)
+        even_folded = folded & (r % 2 == 0)
+        lo_in = None  # fold: the saved received pair value
+        O_saved: dict = {}  # up round k: own pre-combine kept half
+        S_saved: dict = {}  # up round k: received partner half
+        T = P = None
+
+        def permute(tree, perm):
+            return jax.tree.map(
+                lambda a: lax.ppermute(a, axis, perm), tree)
+
+        def rows_of(tree, start, n):
+            return jax.tree.map(
+                lambda a: lax.dynamic_slice_in_dim(a, start, n, 0),
+                tree)
+
+        for st in steps:
+            if st.phase == "fold":
+                _record_round(Y)
+                recv = permute(
+                    Y, [(2 * i, 2 * i + 1) for i in range(rho)])
+                lo_in = recv
+                Y = self.masked_combine(m, odd_folded, recv, Y)
+            elif st.phase == "up":
+                k = st.t
+                half = R >> (k + 1)
+                bit = (v >> k) & 1
+                # the current buffer IS the owned range, so the kept/
+                # sent halves are buffer-local: low or high by bit_k(v)
+                kept = rows_of(Y, bit * half, half)
+                sent = rows_of(Y, (1 - bit) * half, half)
+                _record_round(sent)
+                recv = permute(
+                    sent,
+                    [(reps[u], reps[u ^ (1 << k)]) for u in range(M)])
+                O_saved[k], S_saved[k] = kept, recv
+                if m.commutative:
+                    Y = self.combine(m, recv, kept)
+                else:
+                    # bit set: the partner covers lower virtual ranks
+                    Y = self.exchange_combine(m, recv, kept, bit != 0)
+            elif st.phase == "mid":
+                if T is None:
+                    T = Y  # the own-row window fold
+                    P = m.identity_like(T)
+                w_idx = v >> t_eff
+                s = st.skip  # window stride
+                d = s << t_eff  # virtual-rank distance
+                perm = [(reps[u], reps[u + d]) for u in range(M - d)]
+                if st.combine == "copy":
+                    _record_round(T)
+                    recv = permute(T, perm)
+                    P = jax.tree.map(
+                        lambda c, h: jnp.where(w_idx >= s, c, h),
+                        recv, P)
+                else:
+                    # window 0's P is the identity, so it sends plain T
+                    send = self.combine(m, P, T)
+                    _record_round(send)
+                    recv = permute(send, perm)
+                    P = self.masked_combine(m, w_idx >= s, recv, P)
+            elif st.phase == "down":
+                j = st.t
+                half = R >> (j + 1)
+                if P is None:  # single window: no mid rounds ran
+                    P = m.identity_like(Y)
+                bit = (v >> j) & 1
+                lower = bit == 0
+                prepped = self.combine(m, P, O_saved[j])
+                send = jax.tree.map(
+                    lambda a, b: jnp.where(lower, a, b), prepped, P)
+                _record_round(send)
+                recv = permute(
+                    send,
+                    [(reps[u], reps[u ^ (1 << j)]) for u in range(M)])
+                adj = self.combine(m, P, S_saved[j])
+                own = jax.tree.map(
+                    lambda pp, a: jnp.where(lower, pp, a), P, adj)
+                # widen: own rows keep their side of the doubled
+                # range, the received sibling rows fill the other
+                P = jax.tree.map(
+                    lambda o, c: jnp.where(
+                        lower,
+                        jnp.concatenate([o, c], axis=0),
+                        jnp.concatenate([c, o], axis=0)), own, recv)
+            else:  # unfold
+                _record_round(P)
+                recv = permute(
+                    P, [(2 * i + 1, 2 * i) for i in range(rho)])
+                adj = self.combine(m, P, lo_in)
+                P = jax.tree.map(
+                    lambda a, c, pp: jnp.where(
+                        odd_folded, a,
+                        jnp.where(even_folded, c, pp)), adj, recv, P)
+            _record_op(st.op_count(m.commutative))
+            self._note_round_kernels(st, m)
+        if P is None:  # p == 1: no steps at all, but guard anyway
+            P = Y
+        return jax.tree.map(_jnp_unsplit, P, x)
 
 
 class PallasExecutor(SPMDExecutor):
@@ -1490,6 +1828,9 @@ class SimulatorExecutor(Executor):
             if run[0].kind == "seg_shift":
                 self._run_segmented(run, X, W, op, ident_fn, groups,
                                     _run_seg_count(run, sched))
+            elif run[0].kind == "block_exchange":
+                self._run_block(run, X, W, op, ident_fn, groups,
+                                m.commutative)
             elif run[0].kind == "scan_reduce":
                 prefix = self._run_scan_reduce(run, X, W, op, ident_fn,
                                                groups, m.commutative)
@@ -1624,6 +1965,114 @@ class SimulatorExecutor(Executor):
             for q, i in enumerate(g):
                 W[i] = jax.tree.map(_np_unsplit, R[q],
                                     jax.tree.map(np.asarray, X[i]))
+
+    def _run_block(self, steps, X, W, op, ident_fn, groups,
+                   commutative=False):
+        """Rank-by-rank twin of ``SPMDExecutor._run_block``: state is
+        kept per *virtual* rank (the fold's even partners idle through
+        the core phases), combine orders match the SPMD executor
+        bit-for-bit, and each step records one representative
+        transmitted tree — ``rows`` rows of the split payload, the
+        IR's byte law."""
+        st0 = steps[0]
+        R = st0.seg
+        t_eff = R.bit_length() - 1
+        rho = st0.bound
+        pg = len(groups[0])
+        M = pg - rho
+        reps = [2 * u + 1 if u < rho else u + rho for u in range(M)]
+        sl = (lambda tree, a, n:
+              jax.tree.map(lambda x_: x_[a:a + n], tree))
+        state = []
+        for g in groups:
+            Vs = [jax.tree.map(lambda a: _np_split(a, R), X[i])
+                  for i in g]
+            state.append({
+                "Vs": Vs, "lo": [None] * pg,
+                "Y": [jax.tree.map(np.copy, Vs[reps[u]])
+                      for u in range(M)],
+                "O": {}, "S": {},
+                "T": None, "P": None, "even": None,
+            })
+        for st in steps:
+            _record_round(jax.tree.map(lambda a: a[:st.rows],
+                                       state[0]["Vs"][0]))
+            _record_op(st.op_count(commutative))
+            for s_ in state:
+                Vs, Y = s_["Vs"], s_["Y"]
+                if st.phase == "fold":
+                    for u in range(rho):
+                        s_["lo"][2 * u + 1] = Vs[2 * u]
+                        Y[u] = op(Vs[2 * u], Y[u])
+                elif st.phase == "up":
+                    k = st.t
+                    half = R >> (k + 1)
+                    kept, sent = [], []
+                    for u in range(M):
+                        bit = (u >> k) & 1
+                        # buffer-local halves: the current buffer IS
+                        # the owned row range
+                        kept.append(sl(Y[u], bit * half, half))
+                        sent.append(sl(Y[u], (1 - bit) * half, half))
+                    recvs = [sent[u ^ (1 << k)] for u in range(M)]
+                    s_["O"][k], s_["S"][k] = kept, recvs
+                    for u in range(M):
+                        bit = (u >> k) & 1
+                        Y[u] = op(recvs[u], kept[u]) \
+                            if (commutative or bit) \
+                            else op(kept[u], recvs[u])
+                elif st.phase == "mid":
+                    if s_["T"] is None:
+                        s_["T"] = list(Y)
+                        s_["P"] = [ident_fn(y) for y in Y]
+                    T, P = s_["T"], s_["P"]
+                    s = st.skip
+                    d = s << t_eff
+                    if st.combine == "copy":
+                        send = T
+                    else:
+                        send = [op(P[u], T[u]) for u in range(M)]
+                    s_["P"] = [
+                        (send[u - d] if st.combine == "copy"
+                         else op(send[u - d], P[u]))
+                        if (u >> t_eff) >= s else P[u]
+                        for u in range(M)]
+                elif st.phase == "down":
+                    j = st.t
+                    if s_["P"] is None:  # single window: no mid ran
+                        s_["P"] = [ident_fn(y) for y in Y]
+                    P, O, S2 = s_["P"], s_["O"][j], s_["S"][j]
+                    send = [P[u] if (u >> j) & 1
+                            else op(P[u], O[u]) for u in range(M)]
+                    newP = []
+                    for u in range(M):
+                        bit = (u >> j) & 1
+                        recv = send[u ^ (1 << j)]
+                        own = op(P[u], S2[u]) if bit else P[u]
+                        a, b = (own, recv) if bit == 0 \
+                            else (recv, own)
+                        newP.append(jax.tree.map(
+                            lambda x_, y_: np.concatenate(
+                                [x_, y_], axis=0), a, b))
+                    s_["P"] = newP
+                else:  # unfold
+                    P = s_["P"]
+                    # even partners get the pre-adjust prefix (copy)
+                    s_["even"] = [P[u] for u in range(rho)]
+                    for u in range(rho):
+                        P[u] = op(P[u], s_["lo"][2 * u + 1])
+        for gi, g in enumerate(groups):
+            s_ = state[gi]
+            for u in range(M):
+                i = g[reps[u]]
+                W[i] = jax.tree.map(
+                    _np_unsplit, s_["P"][u],
+                    jax.tree.map(np.asarray, X[i]))
+            for u in range(rho):
+                i = g[2 * u]
+                W[i] = jax.tree.map(
+                    _np_unsplit, s_["even"][u],
+                    jax.tree.map(np.asarray, X[i]))
 
 
 def _axis_groups(sched: Schedule, axis_tag):
@@ -1765,6 +2214,9 @@ def expected_round_bytes(sched: Schedule, per_rank) -> int:
             S = st.seg or sched.n_segments
             total += sum(-(-t.size // S) * t.dtype.itemsize
                          for t in leaves)
+        elif st.kind == "block_exchange":
+            total += sum(st.rows * -(-t.size // st.seg)
+                         * t.dtype.itemsize for t in leaves)
         else:
             total += sum(t.size * t.dtype.itemsize for t in leaves)
     return total

@@ -146,21 +146,24 @@ def schedule_features(sched: "schedule_lib.Schedule", nbytes: int,
     the 3-tuple, so the :class:`Sample` schema and the 3-column NNLS
     design are untouched unless a caller opts in."""
     p = sched.p
-    seg = max((st.seg or sched.n_segments for st in sched.steps
-               if st.kind == "seg_shift"), default=1)
     hops = 0.0
     wire = 0.0
     for st in sched.steps:
         if st.is_round:
             hops += 1
-            wire += -(-nbytes // (st.seg or sched.n_segments)) \
-                if st.kind == "seg_shift" else nbytes
+            wire += schedule_lib.step_wire_bytes(st, nbytes,
+                                                 sched.n_segments)
         elif st.kind in ("allgather", "bcast"):
             hops += p - 1
             wire += p * nbytes
-    op_bytes = sched.op_count(commutative) * -(-nbytes // seg) * op_cost
+    # per-step ⊕/pass byte laws off the IR (DESIGN §7): uniform
+    # schedules reduce to op_count·⌈m/S⌉ exactly; block-distributed
+    # rounds each touch rows·⌈m/R⌉ of the payload
+    op_bytes = schedule_lib.op_wire_bytes(sched, nbytes,
+                                          commutative) * op_cost
     if passes:
-        pass_bytes = sched.kernel_passes(commutative) * -(-nbytes // seg)
+        pass_bytes = schedule_lib.pass_wire_bytes(sched, nbytes,
+                                                  commutative)
         return hops, wire, op_bytes, pass_bytes
     return hops, wire, op_bytes
 
@@ -212,13 +215,19 @@ def measure_schedule_simulated(
                if s.kind == "seg_shift"), default=1)
     hops = st.rounds + (sched.p - 1) * st.allgathers
     wire = sum(st.bytes_per_round) + st.allgathers * sched.p * nbytes
-    op_bytes = st.op_applications * -(-nbytes // seg) * \
-        getattr(m, "op_cost", 1.0)
+    # measured ops × the IR's per-⊕ byte law: uniform schedules apply
+    # every ⊕ to ⌈m/S⌉ bytes; block schedules touch rows·⌈m/R⌉ per
+    # round, so the γ regressor comes from op_wire_bytes (the executors
+    # apply exactly op_count ⊕ per step — verified by verify_plan — so
+    # measured-count × IR-law equals the IR product)
+    op_bytes = schedule_lib.op_wire_bytes(
+        sched, nbytes, m.commutative) * getattr(m, "op_cost", 1.0)
     seconds = truth.cost(
         hops=st.rounds + (sched.p - 1) * st.allgathers,
         serial_bytes=wire, ops=st.op_applications,
         payload_bytes=-(-nbytes // seg),
-        op_cost=getattr(m, "op_cost", 1.0))
+        op_cost=getattr(m, "op_cost", 1.0),
+        op_bytes=op_bytes)
     return seconds, (float(hops), float(wire), float(op_bytes))
 
 

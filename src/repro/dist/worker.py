@@ -139,6 +139,9 @@ class RankExecutor:
                     run, x, w, m, op, ident_fn, g, q, stats)
                 if run[-1].reg:
                     regs[run[-1].reg] = prefix
+            elif run[0].kind == "block_exchange":
+                w = self._run_block(run, x, m, op, ident_fn, g, q,
+                                    stats)
             else:
                 w = self._run_steps(run, x, w, m, op, ident_fn, g, q,
                                     stats)
@@ -244,6 +247,104 @@ class RankExecutor:
             else:
                 w = op(recv, w) if m.commutative else op(w, recv)
         return w, prefix
+
+    def _run_block(self, steps, x, m, op, ident_fn, g, q, stats):
+        """One rank's side of the block-distributed exscan family
+        (fold / vector-halving up / windowed mid exscan / doubling
+        down / unfold) — combine orders mirror
+        ``SimulatorExecutor._run_block`` bit for bit.  Ranks folded
+        onto an odd partner idle through the core phases; the stats
+        rank still records every step (aggregate accounting is
+        schedule-wide, not per-rank)."""
+        import jax
+
+        from repro.core.schedule import _np_split, _np_unsplit
+
+        tr = self.transport
+        pg = len(g)
+        st0 = steps[0]
+        R = st0.seg
+        t_eff = R.bit_length() - 1
+        rho = st0.bound
+        M = pg - rho
+        reps = [2 * u + 1 if u < rho else u + rho for u in range(M)]
+        sl = (lambda tree, a, n:
+              jax.tree.map(lambda x_: x_[a:a + n], tree))
+        Vs = jax.tree.map(lambda a: _np_split(a, R), x)
+        # this rank's virtual id (None: a fold's idle even partner)
+        if q < 2 * rho:
+            u = q // 2 if q % 2 else None
+        else:
+            u = q - rho
+        Y = jax.tree.map(np.copy, Vs) if u is not None else None
+        lo = None
+        O: dict = {}
+        S: dict = {}
+        T = P = None
+        commutative = m.commutative
+        for st in steps:
+            self._rec_round(
+                stats, jax.tree.map(lambda a: a[:st.rows], Vs))
+            self._rec_op(stats, st.op_count(commutative))
+            if st.phase == "fold":
+                if q < 2 * rho:
+                    if u is None:  # even partner: send V, then idle
+                        tr.send(g[q], g[q + 1], Vs)
+                    else:
+                        lo = tr.recv(g[q], g[q - 1])
+                        Y = op(lo, Y)
+            elif st.phase == "up":
+                if u is None:
+                    continue
+                k = st.t
+                half = R >> (k + 1)
+                bit = (u >> k) & 1
+                kept = sl(Y, bit * half, half)
+                sent = sl(Y, (1 - bit) * half, half)
+                peer = g[reps[u ^ (1 << k)]]
+                tr.send(g[q], peer, sent)
+                recv = tr.recv(g[q], peer)
+                O[k], S[k] = kept, recv
+                Y = op(recv, kept) if (commutative or bit) \
+                    else op(kept, recv)
+            elif st.phase == "mid":
+                if u is None:
+                    continue
+                if T is None:
+                    T = Y
+                    P = ident_fn(Y)
+                d = st.skip << t_eff
+                if u + d < M:
+                    send = T if st.combine == "copy" else op(P, T)
+                    tr.send(g[q], g[reps[u + d]], send)
+                if u >= d:
+                    recv = tr.recv(g[q], g[reps[u - d]])
+                    P = recv if st.combine == "copy" else op(recv, P)
+            elif st.phase == "down":
+                if u is None:
+                    continue
+                j = st.t
+                if P is None:  # single window: no mid phase ran
+                    P = ident_fn(Y)
+                bit = (u >> j) & 1
+                peer = g[reps[u ^ (1 << j)]]
+                send = P if bit else op(P, O[j])
+                tr.send(g[q], peer, send)
+                recv = tr.recv(g[q], peer)
+                own = op(P, S[j]) if bit else P
+                a_, b_ = (own, recv) if bit == 0 else (recv, own)
+                P = jax.tree.map(
+                    lambda x_, y_: np.concatenate([x_, y_], axis=0),
+                    a_, b_)
+            else:  # unfold
+                if q < 2 * rho:
+                    if u is None:  # receive the pre-adjust prefix
+                        P = tr.recv(g[q], g[q + 1])
+                    else:
+                        tr.send(g[q], g[q - 1], P)
+                        P = op(P, lo)
+        return jax.tree.map(_np_unsplit, P,
+                            jax.tree.map(np.asarray, x))
 
     def _run_segmented(self, steps, x, op, ident_fn, g, q, S, stats):
         import jax

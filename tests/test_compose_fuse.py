@@ -121,9 +121,17 @@ def test_composed_with_segmented_ring_stage():
     # segmented ring inside the composed schedule
     pl = plan(ScanSpec(kind="exclusive", algorithm="auto",
                        axis_name=("A", "B")), p=(2, 12),
-              nbytes=1 << 20)
+              nbytes=2 << 20)
     assert pl.sub_plans[0].algorithm == "ring"
     assert pl.sub_plans[0].segments > 1
+    res = schedule_lib.verify_plan(pl)
+    assert res["ok"], res
+    # one notch down the payload axis the mid-m block builders own
+    # the inner stage instead, inside the same composed structure
+    pl = plan(ScanSpec(kind="exclusive", algorithm="auto",
+                       axis_name=("A", "B")), p=(2, 12),
+              nbytes=1 << 20)
+    assert pl.sub_plans[0].algorithm == "quartering"
     res = schedule_lib.verify_plan(pl)
     assert res["ok"], res
 
@@ -372,8 +380,8 @@ def test_scan_total_simulator_every_p():
 
 def test_scan_total_pinned_variants_cover_exclusive_algorithms():
     assert algorithms("scan_total") == (
-        "123", "1doubling", "fused_doubling", "native", "ring",
-        "two_op")
+        "123", "1doubling", "fused_doubling", "halving", "native",
+        "quartering", "reduce_scatter", "ring", "two_op")
     for alg in algorithms("scan_total"):
         res = schedule_lib.verify_plan(
             plan(ScanSpec(kind="scan_total", algorithm=alg), p=9,

@@ -120,6 +120,31 @@ def test_rank_executor_noncommutative_and_matmul():
                              monoid_lib.get("matmul"))
 
 
+@pytest.mark.parametrize("p", [2, 3, 4, 6, 7, 12, 16, 17])
+def test_rank_executor_block_builders_battery(p):
+    """Block-distributed mid-m builders (Träff 2026 halving/quartering
+    + reduce-scatter exscan) over sockets: bit-identical to the
+    simulator — stats included — for a commutative integer monoid AND
+    the non-commutative affine monoid, at pow-2 and awkward p alike."""
+    for alg in ("halving", "quartering", "reduce_scatter"):
+        pl = plan(ScanSpec(kind="exclusive", algorithm=alg), p,
+                  nbytes=64)
+        _assert_dist_matches_sim(
+            pl.schedule(), _witness("add", p, 8, seed=p),
+            monoid_lib.ADD)
+        pl = plan(ScanSpec(kind="exclusive", algorithm=alg,
+                           monoid="affine"), p, nbytes=64)
+        _assert_dist_matches_sim(
+            pl.schedule(), _witness("affine", p, 8, seed=p),
+            monoid_lib.get("affine"))
+        if p in (4, 7):  # scan_total variants ride the same block IR
+            pl = plan(ScanSpec(kind="scan_total", algorithm=alg,
+                               monoid="add"), p, nbytes=64)
+            _assert_dist_matches_sim(
+                pl.schedule(), _witness("add", p, 8, seed=p),
+                monoid_lib.ADD)
+
+
 @pytest.mark.parametrize("p_inter,p_intra,nbytes",
                          [(3, 4, 262_144), (2, 4, 1_048_576)])
 def test_rank_executor_composed_hierarchical(p_inter, p_intra, nbytes):
@@ -170,12 +195,13 @@ def test_plan_hierarchical_tiers_diverge():
     assert inner.spec.axes == ("local",)
     assert outer.spec.axes == ("proc",)
     assert inner.algorithm != outer.algorithm
-    assert (inner.algorithm, outer.algorithm) == ("123", "ring")
-    # the opposite regime flips the assignment
+    assert (inner.algorithm, outer.algorithm) == ("halving", "ring")
+    # the opposite regime sends the pricier proc tier round-frugal
+    # while the intra tier stays on the mid-m block builder
     pl2 = plan_hierarchical(spec, p_inter=2, p_intra=4,
                             nbytes=1_048_576)
     assert (pl2.sub_plans[0].algorithm,
-            pl2.sub_plans[-1].algorithm) == ("ring", "123")
+            pl2.sub_plans[-1].algorithm) == ("halving", "123")
 
 
 def test_plan_hierarchical_explain_tags_both_axes():

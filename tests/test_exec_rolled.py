@@ -214,6 +214,20 @@ def test_expected_rounds_cannot_drift_from_oracle():
         # inclusive scan (+ a broadcast, which is not a ppermute round)
         assert ex.expected_rounds("butterfly", p, kind="allreduce") == \
             oracle.rounds_two_op(p)
+        # block-distributed mid-m builders (Träff 2026 + reduce-scatter):
+        # schedule-derived rounds vs the closed forms, any p (the range
+        # above includes every non-power-of-two up to 64)
+        assert ex.expected_rounds("halving", p) == \
+            oracle.rounds_halving(p)
+        assert ex.expected_rounds("quartering", p) == \
+            oracle.rounds_quartering(p)
+        assert ex.expected_rounds("reduce_scatter", p) == \
+            oracle.rounds_reduce_scatter(p)
+        # the textbook depth law: vector halving/doubling exscan takes
+        # 2·⌈log₂p⌉ rounds at powers of two
+        if p > 1 and p & (p - 1) == 0:
+            assert oracle.rounds_reduce_scatter(p) == \
+                2 * (p.bit_length() - 1)
 
 
 def test_expected_ops_reflects_commutative_elision():

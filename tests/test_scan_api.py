@@ -29,7 +29,8 @@ from repro.core.scan_api import (
 
 def test_registry_covers_all_kinds():
     assert algorithms("exclusive") == (
-        "123", "1doubling", "native", "ring", "two_op")
+        "123", "1doubling", "halving", "native", "quartering",
+        "reduce_scatter", "ring", "two_op")
     assert algorithms("inclusive") == ("hillis_steele",)
     assert algorithms("allreduce") == ("butterfly",)
 
@@ -63,26 +64,29 @@ def test_auto_flips_to_ring_as_payload_grows():
     large = plan(spec, p=36, nbytes=64 << 20)
     assert small.algorithm == "123"
     assert large.algorithm == "ring"
-    # the flip is monotone: find the boundary and check both sides
-    lo, hi = 64, 64 << 20
-    while lo * 2 < hi:
-        mid = lo * 2
-        if plan(spec, p=36, nbytes=mid).algorithm == "123":
-            lo = mid
-        else:
-            hi = mid
-    assert plan(spec, p=36, nbytes=lo).algorithm == "123"
-    assert plan(spec, p=36, nbytes=hi).algorithm == "ring"
+    # the winner progression over m is monotone through the regimes:
+    # a round-frugal small-m family, then the block-distributed mid-m
+    # builders, then the segmented ring — never backwards
+    regime = {"123": 0, "1doubling": 0, "two_op": 0, "native": 0,
+              "halving": 1, "quartering": 1, "reduce_scatter": 1,
+              "ring": 2}
+    winners = [plan(spec, p=36, nbytes=64 << e).algorithm
+               for e in range(0, 21)]
+    ranks = [regime[a] for a in winners]
+    assert ranks == sorted(ranks), winners
+    assert 1 in ranks, winners  # the mid-m band is non-empty at p=36
 
 
 def test_auto_respects_cost_model_override():
     # a latency-free, bandwidth-free model cares only about ⊕ bytes:
-    # among unsegmented algorithms (segments=1 pin), native's p-1 local
-    # folds lose to 123's q-1 even for huge payloads
+    # among unsegmented algorithms (segments=1 pin), native's p-1
+    # whole-payload local folds lose — to 123's q-1, and now to the
+    # block builders whose ⊕ touches shrinking m/R row blocks
     ops_only = CostModel(alpha=0.0, beta=0.0, gamma=1.0)
     pl = plan(ScanSpec(algorithm="auto", segments=1), p=36,
               nbytes=64 << 20, cost_model=ops_only)
-    assert pl.algorithm in ("123", "1doubling")  # ⊕-frugal families
+    assert pl.algorithm in ("123", "1doubling", "halving",
+                            "quartering", "reduce_scatter")
     # with segmentation free to vary, the pipelined ring's per-round ⊕
     # touches only m/S bytes — it is legitimately the ⊕-byte-frugal
     # choice for huge payloads
@@ -240,8 +244,8 @@ print("OK plans-match-measurements", checked)
 def test_plan_predictions_match_measured_stats():
     out = run_with_devices(_PROPERTY, 17, x64=False, timeout=1200)
     assert "OK plans-match-measurements" in out
-    # 16 p-values x (5 exclusive + 1 inclusive + 1 allreduce)
-    assert "112" in out
+    # 16 p-values x (8 exclusive + 1 inclusive + 1 allreduce)
+    assert "160" in out
 
 
 # "auto" end-to-end: the traced program uses the planner's pick, and the
@@ -290,7 +294,7 @@ from repro.core.scan_api import ScanSpec, scan, plan
 p = 8
 mesh = Mesh(np.array(jax.devices()).reshape(p), ("x",))
 rng = np.random.default_rng(0)
-x = rng.integers(0, 1 << 30, size=(p, 1 << 17)).astype(np.int64)  # 1MiB
+x = rng.integers(0, 1 << 30, size=(p, 1 << 19)).astype(np.int64)  # 4MiB
 ref = np.zeros_like(x)
 ref[1:] = np.cumsum(x[:-1], axis=0)
 spec = ScanSpec(kind="exclusive", monoid="add", algorithm="auto",

@@ -52,7 +52,7 @@ def test_simulator_matches_oracle_every_algorithm():
                     (kind, alg, p, st, pl)
                 assert st.allgathers == pl.allgathers, (kind, alg, p)
                 checked += 1
-    assert checked == 16 * 7  # 16 p-values x (5 excl + 1 incl + 1 allred)
+    assert checked == 16 * 10  # 16 p-values x (8 excl + 1 incl + 1 allred)
 
 
 @pytest.mark.parametrize("S", [1, 2, 4, 8])
@@ -231,10 +231,15 @@ def test_verify_plan_reports_drift_free():
             assert res["ok"], res
     # segmented + non-commutative + multi-axis
     res = schedule_lib.verify_plan(
+        plan(ScanSpec(algorithm="ring", monoid="affine"), p=12,
+             nbytes=1 << 20))
+    assert res["ok"] and res["segments"] > 1, res
+    # ... while "auto" at that size hands the affine payload to a
+    # mid-m block builder, equally drift-free
+    res = schedule_lib.verify_plan(
         plan(ScanSpec(algorithm="auto", monoid="affine"), p=12,
              nbytes=1 << 20))
-    assert res["ok"] and res["algorithm"] == "ring" \
-        and res["segments"] > 1, res
+    assert res["ok"] and res["algorithm"] == "quartering", res
     # multi-axis plans verify as ONE composed schedule now
     res = schedule_lib.verify_plan(
         plan(ScanSpec(algorithm="auto", axis_name=("pod", "data")),
@@ -301,7 +306,7 @@ print("OK spmd==sim", checked)
 
 def test_spmd_and_simulator_executors_agree():
     out = run_with_devices(_SPMD_VS_SIM, 8)
-    assert "OK spmd==sim 10" in out  # 7 registered + 3 segmented rings
+    assert "OK spmd==sim 13" in out  # 10 registered + 3 segmented rings
 
 
 _PALLAS = """
@@ -316,7 +321,8 @@ mesh = Mesh(np.array(jax.devices()).reshape(p), ("x",))
 x = np.arange(p * 40, dtype=np.int32).reshape(p, 40)
 ref = np.zeros_like(x)
 ref[1:] = np.cumsum(x[:-1], axis=0)
-for alg in ("123", "1doubling", "two_op", "native", "ring"):
+for alg in ("123", "1doubling", "two_op", "native", "ring",
+            "halving", "quartering", "reduce_scatter"):
     spec = ScanSpec(kind="exclusive", monoid="add", algorithm=alg,
                     axis_name="x")
     ex = PallasExecutor("x", interpret=True)
@@ -341,6 +347,24 @@ for r in range(p):
     ca, cb = a[r] * ca, a[r] * cb + b[r]
 np.testing.assert_allclose(np.asarray(ga), oa, rtol=1e-6)
 np.testing.assert_allclose(np.asarray(gb), ob, rtol=1e-6)
+# block-exchange kernel accounting: measured launches / HBM passes on
+# the fused Pallas round path must equal the schedule's own law
+from repro.core.scan_api import plan
+from repro.core.schedule import collect_stats
+for alg in ("halving", "reduce_scatter"):
+    spec = ScanSpec(kind="exclusive", monoid="add", algorithm=alg,
+                    axis_name="x")
+    ex = PallasExecutor("x", interpret=True)
+    f = jax.jit(shard_map(lambda v: scan(v, spec, executor=ex),
+                          mesh=mesh, in_specs=P("x"), out_specs=P("x"),
+                          check_vma=False))
+    with collect_stats() as st:
+        assert np.array_equal(np.asarray(f(x)), ref), alg
+    sched = plan(spec, p=p, nbytes=x[0].nbytes).schedule()
+    assert st.kernel_launches == sched.kernel_launches(True), (
+        alg, st.kernel_launches, sched.kernel_launches(True))
+    assert st.hbm_passes == sched.kernel_passes(True), (
+        alg, st.hbm_passes, sched.kernel_passes(True))
 print("OK pallas executor")
 """
 
@@ -489,3 +513,122 @@ def test_non_pow2_plans_verify_drift_free(p):
                   p, nbytes=64)
         res = schedule_lib.verify_plan(pl)
         assert res["ok"], (kind, p, res)
+
+
+# ---------------------------------------------------------------------------
+# Block-distributed mid-m builders (Träff 2026 halving/quartering +
+# the reduce-scatter exscan): bit-identity battery across p=2..17 —
+# every non-power-of-two included — under commutative and
+# non-commutative monoids, with the closed-form round laws pinned.
+# ---------------------------------------------------------------------------
+
+BLOCK_ALGS = ("halving", "quartering", "reduce_scatter")
+
+
+def _affine_ref(a, b):
+    oa, ob = np.empty_like(a), np.empty_like(b)
+    ca, cb = np.ones_like(a[0]), np.zeros_like(b[0])
+    for r in range(a.shape[0]):
+        oa[r], ob[r] = ca, cb
+        ca, cb = a[r] * ca, a[r] * cb + b[r]
+    return oa, ob
+
+
+@pytest.mark.parametrize("alg", BLOCK_ALGS)
+def test_block_builders_simulator_battery(alg):
+    """Every p in 2..17: results match the sequential reference for
+    add (bit-exact), max (bit-exact, non-zero identity) and the
+    non-commutative affine monoid (allclose — the block tree reorders
+    float ⊕), executed stats match the plan, and the round count
+    matches the closed-form law including non-power-of-two ρ folds."""
+    from repro.core import oracle
+
+    sim = SimulatorExecutor()
+    closed = {"halving": oracle.rounds_halving,
+              "quartering": oracle.rounds_quartering,
+              "reduce_scatter": oracle.rounds_reduce_scatter}[alg]
+    rng = np.random.default_rng(3)
+    for p in range(2, 18):
+        pl = plan(ScanSpec(kind="exclusive", algorithm=alg), p,
+                  nbytes=64)
+        assert pl.rounds == closed(p), (alg, p)
+        x = rng.integers(0, 1 << 30, size=(p, 8)).astype(np.int64)
+        with collect_stats() as st:
+            got = sim.execute(pl.schedule(), x, monoid_lib.ADD)
+        assert np.array_equal(got, _exclusive_ref(x)), (alg, p)
+        assert (st.rounds, st.op_applications, st.allgathers) == \
+            (pl.rounds, pl.op_applications, pl.allgathers), (alg, p)
+        # max: the identity is NOT the zero the row-split pads with,
+        # so this catches any pad lane leaking into a real lane
+        got = sim.execute(pl.schedule(), x, monoid_lib.MAX)
+        want = np.empty_like(x)
+        want[0] = np.iinfo(x.dtype).min  # numpy-path max identity
+        want[1:] = np.maximum.accumulate(x[:-1], axis=0)
+        assert np.array_equal(got, want), (alg, p)
+        # affine: composition order must survive fold/up/mid/down/unfold
+        m = monoid_lib.get("affine")
+        a = rng.standard_normal((p, 8))
+        b = rng.standard_normal((p, 8))
+        ga, gb = sim.execute(
+            plan(ScanSpec(kind="exclusive", algorithm=alg,
+                          monoid="affine"), p, nbytes=64).schedule(),
+            (a, b), m)
+        oa, ob = _affine_ref(a, b)
+        assert np.allclose(ga, oa, rtol=1e-10), (alg, p)
+        assert np.allclose(gb, ob, rtol=1e-10), (alg, p)
+
+
+_BLOCK_NON_POW2 = """
+import jax, numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+from jax import shard_map
+from repro.core import monoid as monoid_lib
+from repro.core.scan_api import ScanSpec, scan, plan
+from repro.core.schedule import SimulatorExecutor, collect_stats
+
+sim = SimulatorExecutor()
+rng = np.random.default_rng(1)
+checked = 0
+for p in (3, 5, 6, 7, 12):
+    mesh = Mesh(np.array(jax.devices()[:p]).reshape(p), ("x",))
+    for alg in ("halving", "quartering", "reduce_scatter"):
+        spec = ScanSpec(kind="exclusive", algorithm=alg, axis_name="x")
+        x = rng.integers(0, 1 << 30, size=(p, 24)).astype(np.int64)
+        with collect_stats() as st_spmd:
+            f = jax.jit(shard_map(lambda v: scan(v, spec), mesh=mesh,
+                                  in_specs=P("x"), out_specs=P("x")))
+            got = np.asarray(f(x))
+        pl = plan(spec, p=p, nbytes=x[0].nbytes)
+        with collect_stats() as st_sim:
+            ref = sim.execute(pl.schedule(), x, monoid_lib.ADD)
+        assert np.array_equal(got, np.asarray(ref)), (alg, p)
+        assert (st_spmd.rounds, st_spmd.op_applications) == (
+            st_sim.rounds, st_sim.op_applications), (alg, p)
+        assert st_spmd.bytes_per_round == st_sim.bytes_per_round, \\
+            (alg, p)
+        checked += 1
+        if p in (6, 12):  # non-commutative at the rho-fold sizes
+            aspec = ScanSpec(kind="exclusive", monoid="affine",
+                             algorithm=alg, axis_name="x")
+            a = rng.standard_normal((p, 8))
+            b = rng.standard_normal((p, 8))
+            f = jax.jit(shard_map(lambda A, B: scan((A, B), aspec),
+                                  mesh=mesh, in_specs=(P("x"), P("x")),
+                                  out_specs=(P("x"), P("x"))))
+            ga, gb = f(a, b)
+            m = monoid_lib.get("affine")
+            ra, rb = sim.execute(
+                plan(aspec, p=p, nbytes=a[0].nbytes).schedule(),
+                (a, b), m)
+            assert np.allclose(np.asarray(ga), ra, rtol=1e-12), (alg, p)
+            assert np.allclose(np.asarray(gb), rb, rtol=1e-12), (alg, p)
+            checked += 1
+print("OK block non-pow2", checked)
+"""
+
+
+def test_block_builders_spmd_non_pow2_sweep():
+    """SPMD == simulator at p in {3,5,6,7,12}: results, stats and
+    per-round byte profile, for add (bit-exact) and affine."""
+    out = run_with_devices(_BLOCK_NON_POW2, 12)
+    assert "OK block non-pow2 21" in out  # 15 add cells + 6 affine
