@@ -65,8 +65,15 @@ def run_config(cfg: dict, seed: int = 0) -> dict:
     x = _payload(pl.p, cfg["nbytes"], seed)
     m = monoid_lib.get("add")
 
+    from repro.core import tune
+
     with WorkerPool(cfg["nprocs"], cfg["p_intra"]) as pool:
         res = run_plan(pool, pl, x)
+        # the raw "dci" latency evidence: one-way ping-pong hop times
+        # at a small and the config's payload size (previously only
+        # measured transiently during calibrate_dist, then discarded)
+        hops = tune.measure_hops(pool, sizes=(8, cfg["nbytes"]),
+                                 repeats=5)
 
     with schedule_lib.collect_stats() as sim_st:
         want = schedule_lib.SimulatorExecutor().execute(sched, x, m)
@@ -93,6 +100,9 @@ def run_config(cfg: dict, seed: int = 0) -> dict:
         "cross_bytes": res.transport["cross_bytes"],
         "cross_msgs": res.transport["cross_msgs"],
         "seconds": res.seconds[0],
+        "rank_seconds": res.rank_seconds[0] if res.rank_seconds
+        else [],
+        "hop_timings": hops,
         "bit_identical": bool(identical),
     }
     row["tiers_diverge"] = inner.algorithm != outer.algorithm
@@ -124,8 +134,11 @@ def main(argv=None) -> int:
               f"cross_bytes={r['cross_bytes']} "
               f"identical={r['bit_identical']} ok={r['ok']}")
     if args.json:
+        from repro.core.benchmeta import bench_metadata
+
         with open(args.json, "w") as f:
-            json.dump({"schema_version": 1, "benchmark": "dist",
+            json.dump({"meta": bench_metadata(),
+                       "schema_version": 2, "benchmark": "dist",
                        "rows": rows}, f, indent=1, sort_keys=True)
         print(f"wrote {args.json}")
     bad = [r for r in rows if not r["ok"]]

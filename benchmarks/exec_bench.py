@@ -336,8 +336,11 @@ def main(argv=None) -> int:
         print(f"{key}/simulated_us,{r['simulated_seconds'] * 1e6:.2f},"
               f"default_ici_clock")
     if args.json:
+        from repro.core.benchmeta import bench_metadata
+
         with open(args.json, "w") as f:
-            json.dump({"schema_version": 2, "benchmark": "exec_bench",
+            json.dump({"meta": bench_metadata(),
+                       "schema_version": 2, "benchmark": "exec_bench",
                        "trace_eq_budget": TRACE_EQ_BUDGET,
                        "min_fused_pass_win": MIN_FUSED_PASS_WIN,
                        "rows": rows}, f, indent=1, sort_keys=True)

@@ -327,8 +327,11 @@ def run(csv_rows: list, check: bool = False, profile=None):
 def write_json(rows: list, path: str, profile) -> None:
     """Machine-readable benchmark output (BENCH_plan_table.json): the
     CSV rows plus the pricing provenance that produced them."""
+    from repro.core.benchmeta import bench_metadata
+
     with open(path, "w") as f:
         json.dump({
+            "meta": bench_metadata(),
             "schema_version": 1,
             "benchmark": "plan_table",
             "profile": profile.provenance(),

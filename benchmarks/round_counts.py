@@ -157,8 +157,11 @@ if __name__ == "__main__":
     for r in rows:
         print(",".join(str(x) for x in r))
     if args.json:
+        from repro.core.benchmeta import bench_metadata
+
         with open(args.json, "w") as f:
-            json.dump({"schema_version": 1,
+            json.dump({"meta": bench_metadata(),
+                       "schema_version": 1,
                        "benchmark": "round_counts",
                        "rows": [[k, v, note] for k, v, note in rows]},
                       f, indent=1, sort_keys=True)

@@ -188,8 +188,11 @@ def main(argv=None) -> int:
     print(f"post-warmup plan compiles: {rows[-1]['post_warmup_compiles']}")
 
     if args.json:
+        from repro.core.benchmeta import bench_metadata
+
         with open(args.json, "w") as f:
-            json.dump({"schema_version": 1, "benchmark": "serve_bench",
+            json.dump({"meta": bench_metadata(),
+                       "schema_version": 1, "benchmark": "serve_bench",
                        "p": P, "max_batch": MAX_BATCH,
                        "min_fused_round_win": MIN_FUSED_ROUND_WIN,
                        "rows": rows}, f, indent=1, sort_keys=True)

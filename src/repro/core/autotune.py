@@ -1,0 +1,512 @@
+"""Online self-tuning: streaming cost-profile refits with drift gates.
+
+The planner's α/β/γ constants ARE the performance in the paper's
+small-m regime — a stale profile silently picks the wrong algorithm
+across the whole mid-m winner map, and the crossover points move
+whenever the fabric does.  :mod:`repro.core.tune` fits those constants
+offline; this module closes the loop **online**:
+
+    execute ──▶ collect_stats ──▶ reservoir ──▶ NNLS refit
+                                                     │
+            re-warmup ◀── cache invalidate ◀── drift gate ◀─┘
+                                 │
+                              install
+
+Every real execution (a :class:`~repro.serve.service.ScanService`
+batch, a ``train.py`` probe, a :class:`~repro.dist.launcher.WorkerPool`
+run) feeds one :class:`~repro.core.tune.Sample` — the IR-derived
+features priced exactly like the planner prices them, plus measured
+seconds — into a bounded per-tier reservoir.  Periodically the
+controller re-runs the existing NNLS fit (:func:`tune.fit_tier`) and
+installs a recalibrated :class:`~repro.core.scan_api.CostProfile`
+**only** when the fitted constants drift past a configurable gate
+relative to the installed profile AND the fit residual is below a
+quality gate (a noisy fit never replaces working constants; stable
+constants never thrash the cache).  Installation is atomic from the
+planner's point of view: the plan cache is keyed by resolved pricing
+constants, so the new profile changes every key, and the controller
+flushes the stale generation via ``plan_cache_resize()`` (whose return
+value reports how many plans the drift invalidated — distinct from
+LRU pressure).  Subscribers (the serve layer) are notified so a warmed
+service can re-``warmup()`` and keep its zero-post-warmup-compile
+contract across the swap.
+
+On the dist tier, per-rank execution timings from
+:class:`~repro.dist.worker.RankExecutor` runs feed a
+:class:`StragglerDetector`: ranks persistently slower than the median
+inflate the "dci" α (every round of a synchronous collective completes
+when its slowest participant does), and
+:func:`replan_hierarchical` re-searches ``plan_hierarchical``'s
+p_inter × p_intra factoring under the inflated pricing — stragglers
+push the plan toward fewer inter-tier rounds.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+
+import numpy as np
+
+from repro.core import monoid as monoid_lib
+from repro.core import scan_api
+from repro.core import schedule as schedule_lib
+from repro.core import tune
+from repro.core.scan_api import CostModel, CostProfile
+
+
+# ---------------------------------------------------------------------------
+# Drift gate + refit outcome
+# ---------------------------------------------------------------------------
+
+
+def relative_drift(old: CostModel, new: CostModel) -> float:
+    """Symmetric relative change of the pricing constants, in [0, 1]:
+    ``max over {α, β, γ} of |new − old| / max(|new|, |old|)`` (0/0
+    counts as no drift).  A 4× shift scores 0.75; identical constants
+    score 0.  Symmetric so growth and decay gate alike."""
+    drift = 0.0
+    for a, b in ((old.alpha, new.alpha), (old.beta, new.beta),
+                 (old.gamma, new.gamma)):
+        denom = max(abs(a), abs(b))
+        if denom > 0.0:
+            drift = max(drift, abs(a - b) / denom)
+    return drift
+
+
+@dataclasses.dataclass(frozen=True)
+class DriftGate:
+    """When does a refit replace the installed profile?
+
+    drift: minimum :func:`relative_drift` of any refitted tier vs the
+      installed profile (0.5 ≈ a 2× constant change) — below it the
+      fit is confirmation, not news, and installing would only churn
+      the plan cache.
+    max_residual: maximum relative-RMS fit residual a tier may carry
+      and still be trusted (a mixed-regime window mid-drift fits two
+      fabrics at once and shows up here — the gate holds the old
+      profile until the reservoir turns over to the new regime).
+    min_samples: per-tier sample floor before fitting at all (3
+      unknowns want feature spread, not just rows).
+    """
+
+    drift: float = 0.5
+    max_residual: float = 0.25
+    min_samples: int = 12
+
+
+@dataclasses.dataclass(frozen=True)
+class RefitResult:
+    """One ``maybe_refit`` outcome (``AutoTuner.history`` keeps them).
+
+    ``reason`` is machine-readable: "installed", "stable" (fit fine,
+    drift under the gate), "noisy" (residual over the gate),
+    "no_samples" (no tier met the floor), or "not_due" (refit cadence
+    not reached).  ``plans_dropped`` is the stale-plan count the
+    install flushed (0 unless installed)."""
+
+    installed: bool
+    reason: str
+    profile: CostProfile | None = None
+    drift: tuple = ()  # ((tier, relative_drift), ...)
+    residuals: tuple = ()  # ((tier, fit_residual), ...)
+    plans_dropped: int = 0
+
+
+# ---------------------------------------------------------------------------
+# Straggler detection (dist tier)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class StragglerReport:
+    """Per-rank timing summary: who is slow, and by how much.
+
+    ``inflation`` is the factor a synchronous collective's round time
+    grows by because of the slowest rank (max smoothed per-rank
+    seconds / median), 1.0 when nobody straggles."""
+
+    rank_seconds: tuple
+    median: float
+    slow_ranks: tuple
+    inflation: float
+
+    @property
+    def straggling(self) -> bool:
+        return bool(self.slow_ranks)
+
+
+class StragglerDetector:
+    """EWMA per-rank execution times → :class:`StragglerReport`.
+
+    A rank is a straggler when its smoothed time exceeds
+    ``threshold ×`` the median of all smoothed times.  The EWMA keeps
+    one transient GC pause from triggering a replan while persistent
+    slowness (an overheating host, a degraded link) accumulates."""
+
+    def __init__(self, *, threshold: float = 1.5, smoothing: float = 0.5):
+        if threshold <= 1.0:
+            raise ValueError(f"threshold must be > 1, got {threshold}")
+        if not 0.0 < smoothing <= 1.0:
+            raise ValueError(f"smoothing must be in (0, 1], "
+                             f"got {smoothing}")
+        self.threshold = float(threshold)
+        self.smoothing = float(smoothing)
+        self._ewma: dict[int, float] = {}
+
+    def observe(self, rank_seconds) -> StragglerReport:
+        """Fold one execution's per-rank seconds (global-rank order)
+        into the smoothed state and report."""
+        for rank, sec in enumerate(rank_seconds):
+            prev = self._ewma.get(rank)
+            self._ewma[rank] = float(sec) if prev is None else \
+                (1 - self.smoothing) * prev + self.smoothing * float(sec)
+        return self.report()
+
+    def report(self) -> StragglerReport:
+        if not self._ewma:
+            return StragglerReport(rank_seconds=(), median=0.0,
+                                   slow_ranks=(), inflation=1.0)
+        ranks = sorted(self._ewma)
+        secs = tuple(self._ewma[r] for r in ranks)
+        med = float(np.median(secs))
+        if med <= 0.0:
+            return StragglerReport(rank_seconds=secs, median=med,
+                                   slow_ranks=(), inflation=1.0)
+        slow = tuple(r for r, s in zip(ranks, secs)
+                     if s > self.threshold * med)
+        inflation = max(1.0, max(secs) / med) if slow else 1.0
+        return StragglerReport(rank_seconds=secs, median=med,
+                               slow_ranks=slow, inflation=inflation)
+
+    def reset(self):
+        self._ewma.clear()
+
+
+def straggler_adjusted_profile(profile: CostProfile,
+                               report: StragglerReport, *,
+                               tier: str = "dci") -> CostProfile:
+    """``profile`` with ``tier``'s α inflated by ``report.inflation``.
+
+    A synchronous round across the slow tier completes when its
+    slowest participant does, so a persistent straggler multiplies the
+    effective per-round latency — exactly the α term.  β/γ are left
+    alone: the link and the healthy ranks' compute did not change."""
+    if report.inflation <= 1.0:
+        return profile
+    cm = profile.model(tier)
+    inflated = dataclasses.replace(cm, alpha=cm.alpha * report.inflation)
+    tiers = tuple((name, inflated if name == tier else m)
+                  for name, m in profile.tiers)
+    return dataclasses.replace(profile, tiers=tiers)
+
+
+def _factorings(p: int) -> list[tuple[int, int]]:
+    return [(d, p // d) for d in range(1, p + 1) if p % d == 0]
+
+
+def replan_hierarchical(spec, p: int, *, nbytes: int,
+                        cost_model=None,
+                        report: StragglerReport | None = None,
+                        inter_axis: str = "proc",
+                        intra_axis: str = "local"):
+    """Search every p_inter × p_intra factoring of ``p`` under
+    (optionally straggler-inflated) pricing; returns the cheapest
+    :class:`~repro.core.scan_api.ScanPlan`.
+
+    With a straggling :class:`StragglerReport` the "dci" α is
+    inflated first (:func:`straggler_adjusted_profile`), which pushes
+    the winning factoring toward fewer inter-tier ranks — the
+    controller's answer to "re-plan around the slow hosts".  Single-
+    level factorings (p_inter == 1 or p_intra == 1) degenerate to the
+    corresponding flat plan and compete on equal terms."""
+    if p < 1:
+        raise ValueError(f"need p >= 1, got {p}")
+    cm = cost_model
+    if cm is None:
+        from repro.launch import mesh as mesh_lib  # lazy: no cycle
+
+        cm = mesh_lib.current_profile()
+    if report is not None and isinstance(cm, CostProfile):
+        cm = straggler_adjusted_profile(cm, report)
+    best = None
+    for p_inter, p_intra in _factorings(p):
+        if 1 in (p_inter, p_intra):
+            axis = intra_axis if p_inter == 1 else inter_axis
+            if isinstance(cm, CostProfile) and p_intra == 1 \
+                    and inter_axis not in dict(cm.axis_tiers):
+                prof = dataclasses.replace(
+                    cm, axis_tiers=cm.axis_tiers + ((inter_axis,
+                                                     "dci"),))
+            else:
+                prof = cm
+            pl = scan_api.plan(spec.over(axis), p, nbytes=nbytes,
+                               cost_model=prof)
+        else:
+            pl = scan_api.plan_hierarchical(
+                spec, p_inter=p_inter, p_intra=p_intra, nbytes=nbytes,
+                cost_model=cm, inter_axis=inter_axis,
+                intra_axis=intra_axis)
+        if best is None or pl.cost < best.cost:
+            best = pl
+    return best
+
+
+# ---------------------------------------------------------------------------
+# The streaming controller
+# ---------------------------------------------------------------------------
+
+
+class AutoTuner:
+    """Streaming calibration controller: reservoirs → refit → gate →
+    install → invalidate (see the module docstring's loop).
+
+    Args:
+      base: the profile the controller starts from and measures drift
+        against (default: the currently installed launch-layer
+        profile).  Its axis routing / default tier carry through every
+        refit — the controller recalibrates constants, not topology.
+      gate: the :class:`DriftGate` thresholds.
+      capacity: per-tier reservoir bound (a sliding window — newest
+        samples evict oldest, so the fit follows the fabric instead of
+        averaging over its whole history).
+      refit_every: executions between ``maybe_refit`` attempts (the
+        NNLS is cheap, but fitting after every batch is pointless
+        churn).
+      install: when False the controller computes refits and gates but
+        never touches the global profile or cache — observe-only mode
+        for benchmarks comparing against an oracle.
+      straggler_threshold: slow-rank multiple for the dist-tier
+        :class:`StragglerDetector`.
+    """
+
+    def __init__(self, base: CostProfile | None = None, *,
+                 gate: DriftGate | None = None, capacity: int = 128,
+                 refit_every: int = 16, install: bool = True,
+                 straggler_threshold: float = 1.5,
+                 mesh_fingerprint: str = "online"):
+        if capacity < 1:
+            raise ValueError(f"need capacity >= 1, got {capacity}")
+        if refit_every < 1:
+            raise ValueError(f"need refit_every >= 1, "
+                             f"got {refit_every}")
+        if base is None:
+            from repro.launch import mesh as mesh_lib  # lazy: no cycle
+
+            base = mesh_lib.current_profile()
+        self.profile = base
+        self.gate = gate or DriftGate()
+        self.capacity = int(capacity)
+        self.refit_every = int(refit_every)
+        self.install_enabled = bool(install)
+        self.mesh_fingerprint = mesh_fingerprint
+        self.stragglers = StragglerDetector(
+            threshold=straggler_threshold)
+        self._reservoirs: dict[str, deque] = {}
+        self._since_refit = 0
+        self._subscribers: list = []
+        self.executions = 0
+        self.refits = 0
+        self.installs = 0
+        self.plans_dropped = 0
+        self.history: list[RefitResult] = []
+
+    # -- sample intake -------------------------------------------------
+
+    def reservoir(self, tier: str) -> deque:
+        res = self._reservoirs.get(tier)
+        if res is None:
+            res = self._reservoirs[tier] = deque(maxlen=self.capacity)
+        return res
+
+    def reservoir_sizes(self) -> dict:
+        return {t: len(r) for t, r in self._reservoirs.items()}
+
+    def add_sample(self, sample: "tune.Sample"):
+        """Feed one pre-featurized sample row (the dist calibration
+        sweep and tests use this directly)."""
+        self.reservoir(sample.tier).append(sample)
+        self.executions += 1
+        self._since_refit += 1
+
+    def record(self, sched_or_scheds, nbytes, seconds: float, *,
+               tier: str = "ici", monoid="add",
+               stats: "schedule_lib.CollectiveStats | None" = None,
+               algorithm: str = "online", kind: str = "exclusive"):
+        """Turn one measured execution into a reservoir sample.
+
+        ``sched_or_scheds`` is the executed schedule (or a list of
+        schedules a serial batch ran back-to-back, with matching
+        ``nbytes`` per schedule) — features are the planner's exact
+        pricing regressors (:func:`tune.schedule_features`) summed
+        over the executed schedules, against the one measured
+        ``seconds``.  When ``stats`` (a ``collect_stats()`` recording
+        of this execution) is passed, its measured round/⊕ counts are
+        cross-checked against the IR-derived hop count; a mismatched
+        recording is rejected rather than poisoning the fit."""
+        scheds = sched_or_scheds if isinstance(sched_or_scheds,
+                                               (list, tuple)) \
+            else [sched_or_scheds]
+        sizes = nbytes if isinstance(nbytes, (list, tuple)) \
+            else [nbytes] * len(scheds)
+        if len(sizes) != len(scheds):
+            raise ValueError(f"{len(scheds)} schedules but "
+                             f"{len(sizes)} payload sizes")
+        mono = monoid_lib.get(monoid)
+        op_cost = getattr(mono, "op_cost", 1.0)
+        hops = wire = op_bytes = 0.0
+        rounds = ops = 0
+        for sched, m in zip(scheds, sizes):
+            h, w, ob = tune.schedule_features(
+                sched, int(m), op_cost, commutative=mono.commutative)
+            hops += h
+            wire += w
+            op_bytes += ob
+            rounds += sched.rounds
+            ops += sched.op_count(mono.commutative)
+        if stats is not None and (stats.rounds != rounds
+                                  or stats.op_applications != ops):
+            return None  # a foreign recording: do not poison the fit
+        sample = tune.Sample(
+            tier=tier, kind=kind, algorithm=algorithm,
+            p=scheds[0].p, nbytes=int(sum(sizes)),
+            segments=max(s.n_segments for s in scheds),
+            hops=hops, serial_bytes=wire, op_bytes=op_bytes,
+            seconds=float(seconds), clock="online")
+        self.add_sample(sample)
+        return sample
+
+    def observe_dist(self, result, sched, nbytes, *, monoid="add",
+                     tier: str = "dci") -> StragglerReport:
+        """Fold one :class:`~repro.dist.launcher.DistResult` into the
+        controller: the run's median walltime becomes a dci-tier
+        sample, and its per-rank timings (when the pool reported
+        them) feed the straggler detector."""
+        self.record(sched, nbytes,
+                    float(np.median(result.seconds)), tier=tier,
+                    monoid=monoid, algorithm="dist", kind="exclusive")
+        rank_seconds = getattr(result, "rank_seconds", None)
+        if rank_seconds:
+            per_rank = np.median(np.asarray(rank_seconds,
+                                            dtype=np.float64), axis=0)
+            return self.stragglers.observe(per_rank.tolist())
+        return self.stragglers.report()
+
+    def probe(self, spec, p, nbytes: int, *, executor=None,
+              tier: str | None = None):
+        """Plan-and-time one standalone execution at real-work cadence
+        (``train.py``'s scans run inside a jitted step, so the online
+        loop times the planned schedule out-of-band instead).  Returns
+        the executed plan."""
+        pl = scan_api.plan(spec, p, nbytes=nbytes,
+                           cost_model=self.profile)
+        mono = monoid_lib.get(spec.monoid)
+        if executor is None:
+            executor = schedule_lib.SimulatorExecutor()
+        rng = np.random.default_rng(self.executions)
+        x = rng.integers(0, 1 << 30,
+                         size=(pl.p, max(1, nbytes // 8))) \
+            .astype(np.int64)
+        sched = pl.schedule()
+        t0 = time.perf_counter()
+        executor.execute(sched, x, mono)
+        seconds = time.perf_counter() - t0
+        self.record(sched, nbytes, seconds,
+                    tier=tier or self.profile.tier_for_axis(
+                        spec.axis_name),
+                    monoid=spec.monoid, algorithm=pl.algorithm,
+                    kind=spec.kind)
+        return pl
+
+    # -- refit + gate + install ----------------------------------------
+
+    def subscribe(self, fn):
+        """Register ``fn(profile)`` to run after every install (the
+        serve layer re-warms its plan space here)."""
+        self._subscribers.append(fn)
+        return fn
+
+    def maybe_refit(self, *, force: bool = False) -> RefitResult:
+        """Refit when due; install only past the drift gate.
+
+        The controller's one decision point: fit every tier with
+        enough samples, measure drift vs the installed profile, and
+        either install (notifying subscribers, flushing stale plans)
+        or record why not.  ``force`` skips the cadence check only —
+        the drift/residual gates always apply."""
+        if not force and self._since_refit < self.refit_every:
+            return self._log(RefitResult(installed=False,
+                                         reason="not_due"))
+        self._since_refit = 0
+        fits: dict[str, tuple[CostModel, float]] = {}
+        for tier, res in self._reservoirs.items():
+            if len(res) >= self.gate.min_samples:
+                fits[tier] = tune.fit_tier(list(res))
+        if not fits:
+            return self._log(RefitResult(installed=False,
+                                         reason="no_samples"))
+        self.refits += 1
+        known = dict(self.profile.tiers)
+        drift = tuple(sorted(
+            (tier, relative_drift(known[tier], cm)
+             if tier in known else 1.0)  # new tier: always news
+            for tier, (cm, _) in fits.items()))
+        residuals = tuple(sorted((tier, resid)
+                                 for tier, (_, resid) in fits.items()))
+        worst_resid = max(r for _, r in residuals)
+        if worst_resid > self.gate.max_residual:
+            return self._log(RefitResult(
+                installed=False, reason="noisy", drift=drift,
+                residuals=residuals))
+        if max(d for _, d in drift) < self.gate.drift:
+            return self._log(RefitResult(
+                installed=False, reason="stable", drift=drift,
+                residuals=residuals))
+        profile = self._build_profile(fits)
+        dropped = self.install(profile)
+        return self._log(RefitResult(
+            installed=True, reason="installed", profile=profile,
+            drift=drift, residuals=residuals, plans_dropped=dropped))
+
+    def _build_profile(self, fits: dict) -> CostProfile:
+        tiers = tuple(
+            (name, fits[name][0] if name in fits else cm)
+            for name, cm in self.profile.tiers)
+        known = {name for name, _ in tiers}
+        tiers += tuple(sorted(
+            (name, cm) for name, (cm, _) in fits.items()
+            if name not in known))
+        residuals = dict(self.profile.residuals)
+        residuals.update({t: r for t, (_, r) in fits.items()})
+        return CostProfile(
+            tiers=tiers, source="calibrated",
+            mesh_fingerprint=self.mesh_fingerprint,
+            axis_tiers=self.profile.axis_tiers,
+            default_tier=self.profile.default_tier,
+            residuals=tuple(sorted(residuals.items())))
+
+    def install(self, profile: CostProfile) -> int:
+        """Make ``profile`` the pricing everywhere at once: the global
+        launch-layer install changes every plan-cache key (stale plans
+        can never be returned again), the ``plan_cache_resize`` flush
+        drops their entries, and subscribers re-warm.  Returns the
+        dropped-plan count."""
+        self.profile = profile
+        dropped = 0
+        if self.install_enabled:
+            from repro.launch import mesh as mesh_lib  # lazy: no cycle
+
+            mesh_lib.install_profile(profile)
+            dropped = scan_api.plan_cache_resize(
+                scan_api.plan_cache_info()["maxsize"]
+                or scan_api.PLAN_CACHE_MAXSIZE)
+        self.installs += 1
+        self.plans_dropped += dropped
+        for fn in self._subscribers:
+            fn(profile)
+        return dropped
+
+    def _log(self, result: RefitResult) -> RefitResult:
+        self.history.append(result)
+        return result

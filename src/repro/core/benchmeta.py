@@ -1,0 +1,65 @@
+"""Shared benchmark-metadata envelope for every ``BENCH_*.json``.
+
+The BENCH files are the repo's perf trajectory — but a row is only
+evidence if you know *which code on which machine at what time*
+produced it.  Every ``benchmarks/*_bench.py`` stamps its JSON with one
+common ``"meta"`` header from :func:`bench_metadata`:
+
+    {"meta": {"meta_schema_version": 1, "git_sha": "...",
+              "timestamp_utc": "2026-...Z", "platform": "cpu"},
+     "schema_version": N, "benchmark": "...", ..., "rows": [...]}
+
+``meta_schema_version`` versions the header itself, independently of
+each benchmark's own row schema; the git sha + UTC timestamp make
+cross-PR comparisons reconstructable, and the worker platform keys
+which fabric the numbers describe (the same reason calibrated
+profiles fingerprint their mesh).
+"""
+
+from __future__ import annotations
+
+import datetime
+import os
+import subprocess
+
+BENCH_META_SCHEMA_VERSION = 1
+
+
+def git_sha(cwd: str | None = None) -> str:
+    """The current commit sha, or "unknown" outside a git checkout
+    (benchmarks must run from exported tarballs too)."""
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "HEAD"],
+            cwd=cwd or os.path.dirname(os.path.abspath(__file__)),
+            capture_output=True, text=True, timeout=10)
+        sha = out.stdout.strip()
+        return sha if out.returncode == 0 and sha else "unknown"
+    except (OSError, subprocess.SubprocessError):
+        return "unknown"
+
+
+def worker_platform() -> str:
+    """The jax backend the measurements ran on, without forcing a jax
+    init when the environment already pins one (the dist launcher's
+    convention: first entry of JAX_PLATFORMS wins)."""
+    env = os.environ.get("JAX_PLATFORMS", "")
+    if env.strip():
+        return env.split(",")[0].strip()
+    try:
+        import jax
+
+        return jax.default_backend()
+    except Exception:  # noqa: BLE001 - metadata must never fail a bench
+        return "unknown"
+
+
+def bench_metadata() -> dict:
+    """The common ``"meta"`` header (see module docstring)."""
+    return {
+        "meta_schema_version": BENCH_META_SCHEMA_VERSION,
+        "git_sha": git_sha(),
+        "timestamp_utc": datetime.datetime.now(
+            datetime.timezone.utc).strftime("%Y-%m-%dT%H:%M:%SZ"),
+        "platform": worker_platform(),
+    }

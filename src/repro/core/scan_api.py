@@ -866,7 +866,24 @@ def _plan_impl(spec: ScanSpec, ps: tuple, nbytes: int,
                     if all(s.pass_bytes >= 0 for s in subs) else -1.0))
 
 
-_plan_cached = functools.lru_cache(maxsize=PLAN_CACHE_MAXSIZE)(_plan_impl)
+# functools.lru_cache counts a miss even when the wrapped call raises
+# (no entry is stored), so eviction accounting needs the error misses
+# tracked separately: evictions = misses - error_misses - currsize.
+_plan_error_misses = 0
+
+
+def _plan_counted(spec: ScanSpec, ps: tuple, nbytes: int,
+                  cms: tuple) -> ScanPlan:
+    global _plan_error_misses
+    try:
+        return _plan_impl(spec, ps, nbytes, cms)
+    except BaseException:
+        _plan_error_misses += 1
+        raise
+
+
+_plan_cached = functools.lru_cache(maxsize=PLAN_CACHE_MAXSIZE)(
+    _plan_counted)
 
 
 def plan(spec: ScanSpec, p: int | tuple | None = None, *,
@@ -968,21 +985,32 @@ def factor_ranks(p: int, nprocs: int) -> tuple[int, int]:
 
 
 def plan_cache_clear():
+    global _plan_error_misses
     _plan_cached.cache_clear()
+    _plan_error_misses = 0
 
 
-def plan_cache_resize(maxsize: int = PLAN_CACHE_MAXSIZE):
+def plan_cache_resize(maxsize: int = PLAN_CACHE_MAXSIZE) -> int:
     """Rebuild the plan cache with a new LRU capacity (entries are
     dropped).  The cache is *always* bounded — least-recently-used
     plans are evicted at capacity — so a long-running service cannot
     grow it without bound; services that want a tighter ceiling than
     :data:`PLAN_CACHE_MAXSIZE` (or a larger one for a big declared
-    bucket set) install it here before warmup."""
-    global _plan_cached
+    bucket set) install it here before warmup.
+
+    Returns the number of cached entries dropped by the rebuild, which
+    is how the autotune controller reports how many stale plans a
+    profile install flushed (calling with the current maxsize is the
+    idiomatic "drop everything now" — distinct from LRU pressure,
+    which ``plan_cache_info()['evictions']`` counts)."""
+    global _plan_cached, _plan_error_misses
     if maxsize is not None and maxsize < 1:
         raise ValueError(f"plan cache maxsize must be >= 1, "
                          f"got {maxsize}")
-    _plan_cached = functools.lru_cache(maxsize=maxsize)(_plan_impl)
+    dropped = _plan_cached.cache_info().currsize
+    _plan_cached = functools.lru_cache(maxsize=maxsize)(_plan_counted)
+    _plan_error_misses = 0
+    return dropped
 
 
 def plan_cache_info() -> dict:
@@ -991,11 +1019,18 @@ def plan_cache_info() -> dict:
     .py --verbose``; the serve subsystem's warmup gate reads the miss
     counter to prove steady state never compiles).  Repeated ``plan()``
     calls with the same (spec, axis sizes, payload bytes, cost model)
-    signature are cache hits; ``size`` never exceeds ``maxsize`` (LRU
-    eviction — see :func:`plan_cache_resize`)."""
+    signature are cache hits; ``size`` never exceeds ``maxsize``.
+
+    ``evictions`` counts entries LRU-dropped under capacity pressure
+    in the current cache generation (a miss that raised stores no
+    entry and is excluded).  ``plan_cache_resize`` starts a fresh
+    generation — its *return value* accounts for the dropped entries,
+    so drift-invalidation flushes never masquerade as LRU pressure."""
     info = _plan_cached.cache_info()
+    evictions = max(0, info.misses - _plan_error_misses - info.currsize)
     return {"hits": info.hits, "misses": info.misses,
-            "size": info.currsize, "maxsize": info.maxsize}
+            "size": info.currsize, "maxsize": info.maxsize,
+            "evictions": evictions}
 
 
 # ---------------------------------------------------------------------------

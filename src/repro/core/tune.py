@@ -431,6 +431,22 @@ def measure_schedule_dist(pool, sched: "schedule_lib.Schedule",
     return float(np.median(res.seconds))
 
 
+HOP_SIZES = (8, 8192, 131_072, 1_048_576)
+
+
+def measure_hops(pool, *, sizes=HOP_SIZES, repeats: int = 10) -> list:
+    """One-way cross-process hop times over a payload-size sweep
+    (``pool.measure_hop`` ping-pongs between process 0 and 1).
+
+    The rows — ``{"nbytes", "seconds"}`` — are the raw "dci" latency
+    evidence: ``benchmarks/dist_bench.py`` persists them into
+    ``BENCH_dist.json`` so the measured α/β of the fabric is
+    reconstructable per PR instead of being discarded after fitting."""
+    return [{"nbytes": int(n),
+             "seconds": pool.measure_hop(int(n), repeats=repeats)}
+            for n in sizes]
+
+
 def calibration_sweep_dist(pool, *, ms=DIST_MS, monoid="add",
                            repeats: int = 3,
                            tier: str = "dci") -> list[Sample]:

@@ -47,6 +47,9 @@ class DistResult:
     seconds: list  # per repeat: max worker walltime
     stats: dict | None  # rank-0 CollectiveStats aggregate (collect=True)
     transport: dict  # summed transport counters (cross_* prove IPC)
+    # per repeat: every rank's execution walltime in global-rank order
+    # (the straggler detector's input — repro.core.autotune)
+    rank_seconds: list = dataclasses.field(default_factory=list)
 
 
 class WorkerPool:
@@ -173,12 +176,19 @@ class WorkerPool:
                                    *outs)
         seconds = [max(r["seconds"][i] for r in replies)
                    for i in range(repeats)]
+        # workers own contiguous rank blocks in process order, so
+        # concatenating their per-rank timings yields global order
+        rank_seconds = [
+            [s for r in replies for s in r["rank_seconds"][i]]
+            for i in range(repeats)
+        ] if all(r.get("rank_seconds") for r in replies) else []
         tstats: dict = {}
         for r in replies:
             for key, v in r["transport"].items():
                 tstats[key] = tstats.get(key, 0) + v
         return DistResult(outputs=stacked, seconds=seconds,
-                          stats=replies[0]["stats"], transport=tstats)
+                          stats=replies[0]["stats"], transport=tstats,
+                          rank_seconds=rank_seconds)
 
     def measure_hop(self, nbytes: int, *, repeats: int = 10) -> float:
         """Median-free one-way cross-process hop estimate: half the

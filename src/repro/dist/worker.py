@@ -381,26 +381,35 @@ class RankExecutor:
 
 
 def run_ranks_threaded(transport, sched, xs, m, *, ranks=None,
-                       stats_rank=None, stats=None):
+                       stats_rank=None, stats=None,
+                       rank_seconds=None):
     """Run a block of ranks concurrently, one thread each (the worker
     process's local block, or every rank for LocalTransport tests).
 
     ``xs`` maps position to the per-rank payload of ``ranks[i]``
     (default: all p ranks).  ``stats`` is recorded by ``stats_rank``
     only (pass global rank 0 on the process that owns it, so totals
-    mirror one simulator run).  Returns outputs in ``ranks`` order and
-    re-raises the first per-rank failure.
+    mirror one simulator run).  ``rank_seconds``, when a list, is
+    filled with each rank's execution walltime in ``ranks`` order —
+    the per-rank timings the straggler detector consumes
+    (:mod:`repro.core.autotune`).  Returns outputs in ``ranks`` order
+    and re-raises the first per-rank failure.
     """
     ranks = list(range(sched.p)) if ranks is None else list(ranks)
     outs: list = [None] * len(ranks)
     errs: list = []
+    if rank_seconds is not None:
+        rank_seconds[:] = [0.0] * len(ranks)
 
     def go(idx, rank):
         try:
+            t0 = time.perf_counter()
             ex = RankExecutor(transport)
             outs[idx] = ex.execute(
                 sched, xs[idx], m, rank,
                 stats=stats if rank == stats_rank else None)
+            if rank_seconds is not None:
+                rank_seconds[idx] = time.perf_counter() - t0
         except BaseException:  # noqa: BLE001 - re-raised on the caller
             errs.append((rank, traceback.format_exc()))
 
@@ -440,14 +449,19 @@ def _handle_run(tr, task):
     stats = schedule_lib.CollectiveStats() if task.get("collect") \
         else None
     seconds = []
+    rank_seconds = []
     outs = None
     for rep in range(int(task.get("repeats", 1))):
         t0 = time.perf_counter()
+        per_rank: list = []
         outs = run_ranks_threaded(
             tr, sched, xs, m, ranks=ranks, stats_rank=0,
-            stats=stats if rep == 0 else None)
+            stats=stats if rep == 0 else None,
+            rank_seconds=per_rank)
         seconds.append(time.perf_counter() - t0)
+        rank_seconds.append(per_rank)
     return {"outputs": outs, "seconds": seconds,
+            "rank_seconds": rank_seconds,
             "stats": _stats_dict(stats) if stats else None,
             "transport": tr.stats()}
 

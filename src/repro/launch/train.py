@@ -79,6 +79,14 @@ def train(argv=None):
                          "tune/profiles or $REPRO_PROFILE_DIR; see "
                          "python -m repro.core.tune)")
     ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--autotune", action="store_true",
+                    help="online cost-profile refits: probe the "
+                         "planned exscan schedule at --autotune-every "
+                         "cadence, stream the timings into NNLS refits "
+                         "and install recalibrated profiles past the "
+                         "drift gate (repro.core.autotune)")
+    ap.add_argument("--autotune-every", type=int, default=10,
+                    help="steps between autotune probes")
     args = ap.parse_args(argv)
 
     get = configs.get_smoke if args.smoke else configs.get
@@ -120,6 +128,19 @@ def train(argv=None):
         vocab=cfg.vocab, seq_len=args.seq, global_batch=args.batch))
     rng = np.random.default_rng(1234)
     watchdog = StragglerWatchdog()
+    tuner = None
+    if args.autotune:
+        from repro.core.autotune import AutoTuner
+
+        # the training scans run inside the jitted step, so the online
+        # loop times the *planned* schedule out-of-band (tuner.probe)
+        # at probe cadence; installs reprice every future plan() call
+        tuner = AutoTuner(profile, mesh_fingerprint="train-online")
+        probe_axes = mesh_lib.batch_axes(mesh)
+        probe_spec = cfg.scan.over(
+            probe_axes[-1] if probe_axes else "data", monoid="add")
+        probe_p = max(2, mesh_lib.data_degree(mesh))
+        probe_bytes = 8 * max(1, getattr(cfg, "n_experts", 8) or 8)
     losses = []
     # "auto" scan specs price each mesh axis by its interconnect tier
     with scan_api.use_cost_model(mesh_lib.axis_cost_model), \
@@ -151,6 +172,15 @@ def train(argv=None):
                       f"ce {float(metrics['ce']):.4f} "
                       f"gnorm {float(metrics['grad_norm']):.3f} "
                       f"{dt*1e3:.0f} ms{'  [STRAGGLER]' if slow else ''}")
+            if tuner is not None and step % args.autotune_every == 0:
+                tuner.probe(probe_spec, probe_p, probe_bytes)
+                res = tuner.maybe_refit()
+                if res.installed:
+                    prov = res.profile.provenance()
+                    print(f"[autotune] step {step}: installed refit "
+                          f"fingerprint={prov['fingerprint']} "
+                          f"drift={dict(res.drift)} "
+                          f"plans_dropped={res.plans_dropped}")
             if store and args.ckpt_every and \
                     (step + 1) % args.ckpt_every == 0:
                 store.save(step + 1, {"params": params, "opt": opt},
@@ -158,6 +188,11 @@ def train(argv=None):
     if store:
         store.wait()
         store.save(args.steps, {"params": params, "opt": opt})
+    if tuner is not None:
+        print(f"[autotune] refits={tuner.refits} "
+              f"installs={tuner.installs} "
+              f"plans_dropped={tuner.plans_dropped} "
+              f"reservoirs={tuner.reservoir_sizes()}")
     print(f"final loss {losses[-1]:.4f} (first {losses[0]:.4f})")
     return losses
 

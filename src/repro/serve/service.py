@@ -149,6 +149,9 @@ class ScanService:
         self._rr = 0  # round-robin offset across bucket queues
         self._now = 0.0
         self._warmup_misses: int | None = None
+        self.last_decision = None  # the latest batch's FusedPlan
+        self._autotuner = None
+        self._autotune_tier = "ici"
 
     # -- clock ---------------------------------------------------------
 
@@ -246,6 +249,40 @@ class ScanService:
         return {"buckets": len(self.buckets),
                 "fused_plans_primed": primed, "cache": info}
 
+    def install_cost_model(self, cost_model, *,
+                           rewarm: bool = True) -> dict | None:
+        """Swap the service's pricing (a recalibrated profile or plain
+        :class:`~repro.core.scan_api.CostModel`) and — by default —
+        re-``warmup()`` immediately.
+
+        A profile swap changes every plan-cache key the service's
+        buckets resolve to, so without the re-warm the next tick of
+        every (bucket, k) pair would miss the cache and re-plan inline;
+        re-warming restores the zero-post-warmup-compile contract
+        before any queued request is drained (the profile-swap test
+        pins this).  Returns the warmup report, or None when
+        ``rewarm=False`` (the caller owns the warmup timing)."""
+        self.cost_model = cost_model
+        return self.warmup() if rewarm else None
+
+    def attach_autotuner(self, tuner, *, tier: str | None = None):
+        """Wire a :class:`~repro.core.autotune.AutoTuner` into the
+        serving loop: every executed batch feeds one measured sample
+        (features summed over the batch's executed schedules against
+        the measured execution seconds), ``tick`` drives the refit
+        cadence, and an install triggers :meth:`install_cost_model`
+        so the zero-compile contract survives the swap."""
+        self._autotuner = tuner
+        if tier is not None:
+            self._autotune_tier = tier
+        else:
+            prof = tuner.profile
+            self._autotune_tier = prof.tier_for_axis(self.axis_name) \
+                if hasattr(prof, "tier_for_axis") else "ici"
+        tuner.subscribe(lambda profile: self.install_cost_model(
+            profile, rewarm=self._warmup_misses is not None))
+        return tuner
+
     @property
     def post_warmup_compiles(self) -> int | None:
         """Plan-cache misses since :meth:`warmup` (None before warmup).
@@ -296,6 +333,10 @@ class ScanService:
                      for _ in range(min(self.max_batch, len(queue)))]
             finalized.extend(self._run_batch(self.buckets[key], batch))
         self.metrics.queue_depth = self.depth
+        if self._autotuner is not None:
+            # the refit cadence rides the batcher: an install fires
+            # the attach-time subscriber, which re-prices and re-warms
+            self._autotuner.maybe_refit()
         return finalized
 
     def _run_batch(self, bucket: Bucket,
@@ -305,11 +346,27 @@ class ScanService:
         t0 = time.perf_counter()
         fp = plan_fused([spec] * k, self.p, [bucket.nbytes] * k,
                         cost_model=self.cost_model)
+        self.last_decision = fp
         xs = [req.payload for req in batch]
+        t_exec = time.perf_counter()
         with schedule_lib.collect_stats() as st:
             results = fp.execute(xs, executor=self.executor)
-        seconds = time.perf_counter() - t0
+        t1 = time.perf_counter()
+        seconds = t1 - t0
         self._now += seconds
+        if self._autotuner is not None:
+            # execution-only seconds against the executed schedules'
+            # exact pricing features (planning time is not fabric time)
+            if fp.fused:
+                scheds = [fp.packed.schedule()]
+                sizes = [fp.packed.payload_bytes]
+            else:
+                scheds = [pl.schedule() for pl in fp.plans]
+                sizes = [pl.payload_bytes for pl in fp.plans]
+            self._autotuner.record(
+                scheds, sizes, t1 - t_exec, tier=self._autotune_tier,
+                monoid=bucket.monoid, stats=st,
+                algorithm=fp.packed.algorithm, kind=bucket.kind)
         serial_rounds = sum(pl.rounds for pl in fp.plans)
         self.metrics.record_batch(
             k, fused=fp.fused, rounds=st.rounds,

@@ -1,0 +1,356 @@
+"""Online self-tuning controller tests (repro.core.autotune).
+
+The control loop's parts in isolation, no global state unless a test
+restores it: the drift metric, the bounded sliding-window reservoirs,
+the refit cadence and its three refusal reasons (not_due / no_samples /
+noisy / stable), the gated install with plan-cache flush accounting and
+subscriber fan-out, the measured-sample intake (including the
+collect_stats cross-check that rejects foreign recordings), the
+dist-tier observe path, the EWMA straggler detector, and the
+straggler-aware hierarchical replan.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import monoid as monoid_lib
+from repro.core import scan_api, schedule as schedule_lib, tune
+from repro.core.autotune import (
+    AutoTuner, DriftGate, StragglerDetector, relative_drift,
+    replan_hierarchical, straggler_adjusted_profile)
+from repro.core.scan_api import CostModel, ScanSpec, plan
+from repro.launch import mesh as mesh_lib
+
+BASE = mesh_lib.DEFAULT_PROFILE
+# (p, m) cells spanning the α- and β-dominated regimes so three
+# unknowns see linearly independent feature rows
+CELLS = [(p, m) for p in (4, 8) for m in (512, 8192, 262_144)]
+
+
+def _scale(cm: CostModel, *, alpha=1.0, beta=1.0, gamma=1.0):
+    return dataclasses.replace(cm, alpha=cm.alpha * alpha,
+                               beta=cm.beta * beta,
+                               gamma=cm.gamma * gamma)
+
+
+def _feed(tuner, truth: CostModel, *, tier="ici", cells=CELLS,
+          repeat=2):
+    """Record ``repeat`` passes over ``cells``: plans under the BASE
+    profile, seconds priced analytically under ``truth`` on the
+    executed schedule's exact features — linear in the regressors, so
+    the NNLS can recover ``truth`` exactly from a pure window."""
+    spec = ScanSpec(kind="exclusive", monoid="add")
+    for _ in range(repeat):
+        for p, m in cells:
+            pl = plan(spec, p, nbytes=m, cost_model=BASE)
+            sched = pl.schedule()
+            h, w, ob = tune.schedule_features(sched, m,
+                                              commutative=True)
+            seconds = truth.cost(hops=int(h), serial_bytes=w, ops=0,
+                                 payload_bytes=0, op_bytes=ob)
+            tuner.record(sched, m, seconds, tier=tier,
+                         algorithm=pl.algorithm)
+
+
+# ---------------------------------------------------------------------------
+# Drift metric
+# ---------------------------------------------------------------------------
+
+
+def test_relative_drift_metric():
+    cm = BASE.model("ici")
+    assert relative_drift(cm, cm) == 0.0
+    # a 4x shift on one constant scores 0.75, symmetrically
+    assert relative_drift(cm, _scale(cm, alpha=4.0)) == \
+        pytest.approx(0.75)
+    assert relative_drift(_scale(cm, alpha=4.0), cm) == \
+        pytest.approx(0.75)
+    # a constant appearing from zero is maximal news; all-zero is none
+    zero = CostModel(alpha=0.0, beta=0.0, gamma=0.0)
+    assert relative_drift(zero, cm) == 1.0
+    assert relative_drift(zero, zero) == 0.0
+    # bounded by construction
+    assert 0.0 <= relative_drift(cm, _scale(cm, beta=1e6)) <= 1.0
+
+
+# ---------------------------------------------------------------------------
+# Reservoirs + cadence
+# ---------------------------------------------------------------------------
+
+
+def test_reservoir_is_bounded_sliding_window():
+    tuner = AutoTuner(BASE, capacity=4, install=False)
+    for i in range(10):
+        tuner.add_sample(tune.Sample(
+            tier="ici", kind="exclusive", algorithm="t", p=4,
+            nbytes=64, segments=1, hops=2, serial_bytes=128.0,
+            op_bytes=64.0, seconds=float(i), clock="online"))
+    res = tuner.reservoir("ici")
+    assert len(res) == 4  # bounded…
+    assert [s.seconds for s in res] == [6.0, 7.0, 8.0, 9.0]  # …newest
+    assert tuner.executions == 10
+    assert tuner.reservoir_sizes() == {"ici": 4}
+    with pytest.raises(ValueError, match="capacity"):
+        AutoTuner(BASE, capacity=0)
+
+
+def test_refit_cadence_and_empty_reservoirs():
+    tuner = AutoTuner(BASE, refit_every=5, install=False)
+    assert tuner.maybe_refit().reason == "not_due"
+    # force skips the cadence only — with no samples nothing fits
+    res = tuner.maybe_refit(force=True)
+    assert (res.installed, res.reason) == (False, "no_samples")
+    # below the per-tier sample floor the tier does not fit either
+    tuner2 = AutoTuner(BASE, install=False,
+                       gate=DriftGate(min_samples=12))
+    _feed(tuner2, BASE.model("ici"), cells=CELLS[:3], repeat=1)
+    assert tuner2.maybe_refit(force=True).reason == "no_samples"
+
+
+def test_stable_constants_never_install():
+    tuner = AutoTuner(BASE, capacity=12, install=False,
+                      gate=DriftGate(drift=0.3, min_samples=12))
+    _feed(tuner, BASE.model("ici"))
+    res = tuner.maybe_refit(force=True)
+    assert (res.installed, res.reason) == (False, "stable")
+    assert dict(res.drift)["ici"] < 0.3
+    assert dict(res.residuals)["ici"] < 1e-6  # exact linear recovery
+    assert tuner.installs == 0 and tuner.refits == 1
+    assert tuner.history[-1] is res
+
+
+def test_drift_past_gate_installs_refit_and_notifies():
+    tuner = AutoTuner(BASE, capacity=12, install=False,
+                      gate=DriftGate(drift=0.3, min_samples=12))
+    seen = []
+    tuner.subscribe(seen.append)
+    shifted = _scale(BASE.model("ici"), alpha=4.0)
+    _feed(tuner, shifted)
+    res = tuner.maybe_refit(force=True)
+    assert (res.installed, res.reason) == (True, "installed")
+    assert dict(res.drift)["ici"] == pytest.approx(0.75)
+    fit = tuner.profile.model("ici")
+    assert fit.alpha == pytest.approx(shifted.alpha, rel=1e-6)
+    assert fit.beta == pytest.approx(shifted.beta, rel=1e-6)
+    assert tuner.profile.source == "calibrated"
+    assert tuner.profile.mesh_fingerprint == "online"
+    # the untouched dci tier carries over from the base profile
+    assert tuner.profile.model("dci") == BASE.model("dci")
+    assert seen == [tuner.profile] and tuner.installs == 1
+    # observe-only mode never touched the global profile
+    assert mesh_lib.current_profile() is not tuner.profile
+
+
+def test_noisy_fit_is_rejected():
+    tuner = AutoTuner(BASE, capacity=12, install=False,
+                      gate=DriftGate(max_residual=0.25,
+                                     min_samples=12))
+    # half the window priced 100x the other half: no single linear
+    # model fits, the relative-RMS residual blows past the gate
+    _feed(tuner, _scale(BASE.model("ici"), alpha=100.0, beta=100.0),
+          cells=CELLS, repeat=1)
+    _feed(tuner, BASE.model("ici"), cells=CELLS, repeat=1)
+    res = tuner.maybe_refit(force=True)
+    assert (res.installed, res.reason) == (False, "noisy")
+    assert dict(res.residuals)["ici"] > 0.25
+    assert tuner.installs == 0
+
+
+def test_unknown_tier_is_always_news():
+    tuner = AutoTuner(BASE, capacity=12, install=False,
+                      gate=DriftGate(drift=0.5, min_samples=12))
+    _feed(tuner, BASE.model("ici"), tier="pcie")
+    res = tuner.maybe_refit(force=True)
+    assert res.installed and dict(res.drift)["pcie"] == 1.0
+    # the new tier lands in the profile after the carried-over ones
+    assert tuner.profile.model("pcie").alpha > 0
+    assert [n for n, _ in tuner.profile.tiers[:2]] == \
+        [n for n, _ in BASE.tiers]
+
+
+def test_record_rejects_foreign_stats_recording():
+    tuner = AutoTuner(BASE, install=False)
+    pl = plan(ScanSpec(kind="exclusive", monoid="add"), 8, nbytes=64,
+              cost_model=BASE)
+    sched = pl.schedule()
+    x = np.arange(8 * 8, dtype=np.int64).reshape(8, 8)
+    with schedule_lib.collect_stats() as st:
+        schedule_lib.SimulatorExecutor().execute(sched, x,
+                                                 monoid_lib.ADD)
+    # a recording of THIS execution passes the cross-check
+    s = tuner.record(sched, 64, 1e-5, stats=st)
+    assert s is not None and len(tuner.reservoir("ici")) == 1
+    # a recording of some OTHER execution is refused, not fitted
+    wrong = schedule_lib.CollectiveStats()
+    wrong.rounds = sched.rounds + 1
+    assert tuner.record(sched, 64, 1e-5, stats=wrong) is None
+    assert len(tuner.reservoir("ici")) == 1
+    # batch intake: schedules and sizes must line up
+    with pytest.raises(ValueError, match="payload sizes"):
+        tuner.record([sched, sched], [64], 1e-5)
+
+
+def test_install_flushes_plan_cache_and_sets_global_profile():
+    prev = mesh_lib.install_profile(None)
+    scan_api.plan_cache_clear()
+    try:
+        with scan_api.use_cost_model(mesh_lib.axis_cost_model):
+            spec = ScanSpec(kind="exclusive", monoid="add")
+            for m in (64, 4096, 262_144):
+                plan(spec.over("pod"), 8, nbytes=m)
+        cached = scan_api.plan_cache_info()["size"]
+        assert cached >= 3
+        tuner = AutoTuner(BASE, install=True)
+        shifted = dataclasses.replace(BASE, tiers=tuple(
+            (n, _scale(cm, alpha=4.0)) for n, cm in BASE.tiers))
+        dropped = tuner.install(shifted)
+        assert dropped == cached  # every stale-priced plan flushed
+        assert scan_api.plan_cache_info()["size"] == 0
+        assert mesh_lib.current_profile() is shifted
+        assert tuner.plans_dropped == cached and tuner.installs == 1
+    finally:
+        mesh_lib.install_profile(prev)
+        scan_api.plan_cache_clear()
+
+
+# ---------------------------------------------------------------------------
+# Straggler detection + replan
+# ---------------------------------------------------------------------------
+
+
+def test_straggler_detector_ewma_and_report():
+    det = StragglerDetector(threshold=1.5, smoothing=1.0)
+    rep = det.report()
+    assert not rep.straggling and rep.inflation == 1.0
+    rep = det.observe([1.0, 1.0, 1.0, 1.0])
+    assert not rep.straggling and rep.slow_ranks == ()
+    rep = det.observe([1.0, 1.0, 1.0, 3.0])
+    assert rep.slow_ranks == (3,)
+    assert rep.inflation == pytest.approx(3.0)
+    assert rep.median == pytest.approx(1.0)
+    det.reset()
+    assert det.report().rank_seconds == ()
+    # smoothing < 1: one transient spike does NOT flag a straggler
+    det = StragglerDetector(threshold=2.0, smoothing=0.25)
+    det.observe([1.0, 1.0, 1.0, 1.0])
+    rep = det.observe([1.0, 1.0, 1.0, 4.0])  # ewma(3) = 1.75 < 2x
+    assert not rep.straggling
+    for _ in range(8):  # …but persistent slowness accumulates
+        rep = det.observe([1.0, 1.0, 1.0, 4.0])
+    assert rep.slow_ranks == (3,)
+    with pytest.raises(ValueError, match="threshold"):
+        StragglerDetector(threshold=1.0)
+    with pytest.raises(ValueError, match="smoothing"):
+        StragglerDetector(smoothing=0.0)
+
+
+def test_straggler_adjusted_profile_inflates_only_dci_alpha():
+    det = StragglerDetector(threshold=1.5, smoothing=1.0)
+    rep = det.observe([1.0, 1.0, 2.5, 1.0])
+    adj = straggler_adjusted_profile(BASE, rep)
+    assert adj.model("dci").alpha == pytest.approx(
+        BASE.model("dci").alpha * 2.5)
+    assert adj.model("dci").beta == BASE.model("dci").beta
+    assert adj.model("ici") == BASE.model("ici")
+    # a healthy report is the identity (same object, no rebuild)
+    calm = det.observe([1.0, 1.0, 1.0, 1.0])
+    for _ in range(8):
+        calm = det.observe([1.0, 1.0, 1.0, 1.0])
+    assert straggler_adjusted_profile(BASE, calm) is BASE
+
+
+def test_replan_hierarchical_searches_factorings():
+    spec = ScanSpec(kind="exclusive", monoid="add")
+    best = replan_hierarchical(spec, 12, nbytes=262_144,
+                               cost_model=BASE)
+    assert best.p == 12
+    # the search winner is no worse than any pinned factoring
+    for p_inter, p_intra in ((2, 6), (3, 4), (4, 3), (6, 2)):
+        pinned = scan_api.plan_hierarchical(
+            spec, p_inter=p_inter, p_intra=p_intra, nbytes=262_144,
+            cost_model=BASE)
+        assert best.cost <= pinned.cost, (p_inter, p_intra)
+    # prime p: only the degenerate flat factorings exist
+    flat = replan_hierarchical(spec, 7, nbytes=4096, cost_model=BASE)
+    assert flat.p == 7 and not flat.algorithm.startswith("composite(")
+    with pytest.raises(ValueError, match="p >= 1"):
+        replan_hierarchical(spec, 0, nbytes=64)
+
+
+def test_replan_hierarchical_straggler_pressure():
+    spec = ScanSpec(kind="exclusive", monoid="add")
+    det = StragglerDetector(threshold=1.5, smoothing=1.0)
+    rep = det.observe([1.0] * 11 + [50.0])  # one pathological host
+    calm_plan = replan_hierarchical(spec, 12, nbytes=262_144,
+                                    cost_model=BASE)
+    slow_plan = replan_hierarchical(spec, 12, nbytes=262_144,
+                                    cost_model=BASE, report=rep)
+    # both are real plans for the same problem; under inflated dci
+    # pricing the winner's cost reflects the inflated α
+    assert slow_plan.p == calm_plan.p == 12
+    assert slow_plan.cost >= calm_plan.cost
+
+
+def test_observe_dist_feeds_reservoir_and_stragglers():
+    from repro.dist.launcher import DistResult
+
+    tuner = AutoTuner(BASE, install=False, straggler_threshold=1.5)
+    pl = plan(ScanSpec(kind="exclusive", monoid="add"), 4, nbytes=64,
+              cost_model=BASE)
+    res = DistResult(
+        outputs=None, seconds=[1e-3, 1.1e-3], stats=None,
+        transport={},
+        rank_seconds=[[1.0, 1.0, 1.0, 3.0], [1.0, 1.0, 1.0, 3.0]])
+    rep = tuner.observe_dist(res, pl.schedule(), 64)
+    assert len(tuner.reservoir("dci")) == 1
+    assert tuner.reservoir("dci")[0].seconds == \
+        pytest.approx(np.median(res.seconds))
+    assert rep.slow_ranks == (3,)
+    # a result without per-rank timings still records the sample
+    bare = DistResult(outputs=None, seconds=[1e-3], stats=None,
+                      transport={})
+    rep = tuner.observe_dist(bare, pl.schedule(), 64)
+    assert len(tuner.reservoir("dci")) == 2
+    assert rep.slow_ranks == (3,)  # detector state persists
+
+
+# ---------------------------------------------------------------------------
+# End-to-end: the serve loop swaps profiles through the subscriber
+# ---------------------------------------------------------------------------
+
+
+def test_service_attach_autotuner_feeds_and_rewarm_on_install():
+    from repro.serve import Bucket, ScanService
+
+    scan_api.plan_cache_clear()
+    tuner = AutoTuner(BASE, capacity=12, refit_every=1000,
+                      install=False,
+                      gate=DriftGate(drift=0.3, min_samples=12))
+    svc = ScanService(
+        8, [Bucket(kind="exclusive", monoid="add", shape=(),
+                   dtype=np.int32)],
+        max_batch=4, cost_model=BASE)
+    svc.attach_autotuner(tuner)
+    assert svc._autotune_tier == BASE.tier_for_axis(None)
+    svc.warmup()
+    rng = np.random.default_rng(0)
+    for _ in range(3):
+        for _ in range(4):
+            svc.submit(rng.integers(0, 9, size=(8,)).astype(np.int32))
+        svc.drain()
+    # every executed batch landed one measured sample
+    assert tuner.executions == 3
+    assert svc.post_warmup_compiles == 0
+    # an install (even observe-only) notifies the service, which
+    # re-prices and re-warms under the new profile — the zero-compile
+    # contract survives the swap
+    shifted = dataclasses.replace(BASE, tiers=tuple(
+        (n, _scale(cm, alpha=4.0)) for n, cm in BASE.tiers))
+    tuner.install(shifted)
+    assert svc.cost_model is shifted
+    for _ in range(4):
+        svc.submit(rng.integers(0, 9, size=(8,)).astype(np.int32))
+    svc.drain()
+    assert svc.post_warmup_compiles == 0

@@ -166,6 +166,25 @@ def test_rank_executor_composed_scan_total_multi_output():
     assert isinstance(got, tuple) and len(got) == 2
 
 
+@pytest.mark.parametrize("p", [3, 5, 6, 7, 12])
+def test_rank_executor_scan_total_non_pow2(p):
+    """Satellite: the non-pow-2 scan_total reroute (fused_doubling —
+    the (rounds, ⊕)-minimal doubling with_total) over the
+    message-passing executor, completing the four-executor battery
+    (simulator/SPMD/Pallas legs live in test_schedule.py)."""
+    pl = plan(ScanSpec(kind="scan_total", monoid="add",
+                       algorithm="fused_doubling"), p, nbytes=64)
+    sched = pl.schedule()
+    assert sched.algorithm == "fused_doubling"
+    x = _witness("add", p, 8, seed=p)
+    got = _assert_dist_matches_sim(sched, x, monoid_lib.ADD)
+    assert isinstance(got, tuple) and len(got) == 2
+    ref = np.zeros_like(x)
+    ref[1:] = np.cumsum(x[:-1], axis=0)
+    assert np.array_equal(got[0], ref)
+    assert np.array_equal(got[1], np.broadcast_to(x.sum(0), x.shape))
+
+
 def test_local_transport_counts_and_masked_consume():
     # a butterfly at p=8 sends on every edge every round; the masked
     # receivers must still consume frames (no cross-round aliasing),
@@ -299,8 +318,31 @@ def test_pool_repeats_and_hop_timing(pool):
     res = pool.run(pl.schedule(), x, repeats=3)
     assert len(res.seconds) == 3
     assert all(s > 0 for s in res.seconds)
+    # per-rank walltimes (the straggler detector's input): one row per
+    # repeat, one positive entry per global rank
+    assert len(res.rank_seconds) == 3
+    for per_rank in res.rank_seconds:
+        assert len(per_rank) == pool.p
+        assert all(s > 0 for s in per_rank)
     hop = pool.measure_hop(8192, repeats=4)
     assert hop > 0
+    # the sweep helper the dist bench exports into BENCH_dist.json
+    hops = tune.measure_hops(pool, sizes=(8, 4096), repeats=2)
+    assert [h["nbytes"] for h in hops] == [8, 4096]
+    assert all(h["seconds"] > 0 for h in hops)
+
+
+def test_pool_observe_dist_feeds_autotuner(pool):
+    from repro.core.autotune import AutoTuner
+
+    pl = plan(ScanSpec(kind="exclusive"), pool.p, nbytes=256)
+    x = _witness("add", pool.p, 32, seed=8)
+    res = pool.run(pl.schedule(), x, repeats=2)
+    tuner = AutoTuner(install=False)
+    rep = tuner.observe_dist(res, pl.schedule(), 256)
+    assert len(tuner.reservoir("dci")) == 1
+    assert len(rep.rank_seconds) == pool.p
+    assert rep.inflation >= 1.0
 
 
 def test_pool_run_plan_wrapper(pool):

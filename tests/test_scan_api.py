@@ -136,6 +136,42 @@ def test_plan_cache_lru_bounded():
     assert plan_cache_info()["maxsize"] == PLAN_CACHE_MAXSIZE
 
 
+def test_plan_cache_evictions_and_resize_dropped_count():
+    """Satellite: plan_cache_info()["evictions"] counts LRU pressure
+    only (planner errors are misses with no entry, never evictions),
+    and plan_cache_resize() returns how many cached plans it dropped —
+    the number the autotuner reports as drift-invalidated."""
+    from repro.core.scan_api import (
+        plan_cache_clear, plan_cache_info, plan_cache_resize)
+
+    spec = ScanSpec(algorithm="123")
+    try:
+        plan_cache_resize(4)
+        assert plan_cache_info()["evictions"] == 0
+        for nbytes in range(8, 18):  # 10 distinct keys into 4 slots
+            plan(spec, p=16, nbytes=nbytes)
+        info = plan_cache_info()
+        assert info["size"] == 4 and info["evictions"] == 6
+        # a planner error is a miss that stores nothing — it must not
+        # inflate the eviction count
+        with pytest.raises(ValueError):
+            plan(ScanSpec(algorithm="nope"), p=8)
+        info = plan_cache_info()
+        assert info["evictions"] == 6 and info["size"] == 4
+        # resize reports exactly the resident plans it dropped…
+        assert plan_cache_resize(8) == 4
+        assert plan_cache_info()["size"] == 0
+        plan(spec, p=16, nbytes=8)
+        assert plan_cache_resize(8) == 1
+        # …and clear resets the whole ledger
+        plan_cache_clear()
+        info = plan_cache_info()
+        assert (info["hits"], info["misses"], info["size"],
+                info["evictions"]) == (0, 0, 0, 0)
+    finally:
+        plan_cache_resize()
+
+
 def test_multiaxis_plan_rewrites_into_subplans():
     spec = ScanSpec(kind="exclusive", algorithm="123",
                     axis_name=("pod", "data"))

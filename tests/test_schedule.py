@@ -515,6 +515,63 @@ def test_non_pow2_plans_verify_drift_free(p):
         assert res["ok"], (kind, p, res)
 
 
+# scan_total at awkward p across the OTHER executors (the simulator
+# legs are above; the dist/LocalTransport leg lives in test_dist.py):
+# the SPMD and Pallas executors must run the rerouted fused_doubling
+# schedule with simulator-identical results and plan-exact stats.
+_SCAN_TOTAL_NON_POW2_EXECUTORS = """
+import jax, numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+from jax import shard_map
+from repro.core import monoid as monoid_lib
+from repro.core.scan_api import ScanSpec, plan, scan_with_total
+from repro.core.schedule import (
+    SimulatorExecutor, PallasExecutor, collect_stats)
+
+sim = SimulatorExecutor()
+rng = np.random.default_rng(2)
+checked = 0
+for p in (3, 5, 6, 7, 12):
+    mesh = Mesh(np.array(jax.devices()[:p]).reshape(p), ("x",))
+    spec = ScanSpec(kind="exclusive", monoid="add",
+                    algorithm="fused_doubling", axis_name="x")
+    pl = plan(spec.over("x", kind="scan_total"), p=p, nbytes=96)
+    sched = pl.schedule()
+    assert sched.algorithm == "fused_doubling", (p, sched.algorithm)
+    x = rng.integers(0, 1 << 30, size=(p, 12)).astype(np.int64)
+    with collect_stats() as st_sim:
+        want_prefix, want_total = sim.execute(sched, x, monoid_lib.ADD)
+    with collect_stats() as st_spmd:
+        f = jax.jit(shard_map(lambda v: scan_with_total(v, spec),
+                              mesh=mesh, in_specs=P("x"),
+                              out_specs=(P("x"), P("x"))))
+        prefix, total = f(x)
+    assert np.array_equal(np.asarray(prefix), want_prefix), p
+    assert np.array_equal(np.asarray(total), want_total), p
+    assert (st_spmd.rounds, st_spmd.op_applications) == (
+        st_sim.rounds, st_sim.op_applications) == (
+        pl.rounds, pl.op_applications), (p, st_spmd, pl)
+    ex = PallasExecutor("x", interpret=True)
+    g = jax.jit(shard_map(
+        lambda v: scan_with_total(v, spec, executor=ex), mesh=mesh,
+        in_specs=P("x"), out_specs=(P("x"), P("x")),
+        check_vma=False))
+    pprefix, ptotal = g(x)
+    assert np.array_equal(np.asarray(pprefix), want_prefix), p
+    assert np.array_equal(np.asarray(ptotal), want_total), p
+    checked += 1
+print("OK scan_total non-pow2 executors", checked)
+"""
+
+
+def test_scan_total_non_pow2_spmd_and_pallas():
+    """Satellite: the non-pow-2 scan_total reroute on the SPMD and
+    Pallas executors at p in {3,5,6,7,12} — (prefix, total) bit-equal
+    to the simulator, measured stats equal to the plan."""
+    out = run_with_devices(_SCAN_TOTAL_NON_POW2_EXECUTORS, 12)
+    assert "OK scan_total non-pow2 executors 5" in out
+
+
 # ---------------------------------------------------------------------------
 # Block-distributed mid-m builders (Träff 2026 halving/quartering +
 # the reduce-scatter exscan): bit-identity battery across p=2..17 —

@@ -199,6 +199,56 @@ def test_warmup_primes_cache_not_just_counts():
     assert after["hits"] > before["hits"]
 
 
+def test_profile_swap_mid_service_rewarm_and_new_winner():
+    """Satellite: swap a drifted cost profile into a WARMED service
+    with requests already queued.  install_cost_model must re-warm
+    (the zero-post-warmup-compile contract survives the swap) and the
+    next drained batch must plan the post-drift winner — the pinned
+    (p=8, packed 256 KiB) dci cell flips halving → two_op under 4×
+    dci α."""
+    import dataclasses
+
+    from repro.launch.mesh import DEFAULT_PROFILE
+
+    plan_cache_clear()
+    # four 64 KiB requests pack to the pinned 256 KiB dci-tier cell
+    bucket = Bucket(kind="exclusive", monoid="add", shape=(8192,),
+                    dtype=np.int64)
+    svc = ScanService(8, [bucket], axis_name="pod", max_batch=4,
+                      cost_model=DEFAULT_PROFILE)
+    svc.warmup()
+    rng = np.random.default_rng(0)
+
+    def submit4():
+        return [svc.submit(rng.integers(0, 1 << 20, size=(8, 8192))
+                           .astype(np.int64)) for _ in range(4)]
+
+    reqs = submit4()
+    svc.drain()
+    assert all(r.status == "done" for r in reqs)
+    assert svc.post_warmup_compiles == 0
+    assert svc.last_decision.packed.algorithm == "halving"
+    # drift lands while requests sit in the queue
+    queued = submit4()
+    drifted = dataclasses.replace(DEFAULT_PROFILE, tiers=tuple(
+        (n, dataclasses.replace(cm, alpha=cm.alpha * 4.0)
+         if n == "dci" else cm)
+        for n, cm in DEFAULT_PROFILE.tiers))
+    report = svc.install_cost_model(drifted)
+    assert report is not None and report["fused_plans_primed"] == 4
+    assert svc.post_warmup_compiles == 0  # re-warmed before draining
+    done = svc.drain()
+    assert [r.status for r in done] == ["done"] * 4
+    for r, q in zip(done, queued):
+        assert r is q
+        ref = np.zeros_like(r.payload)
+        ref[1:] = np.cumsum(r.payload[:-1], axis=0)
+        np.testing.assert_array_equal(r.result, ref)
+    # the queued batch planned under the NEW pricing: winner flipped
+    assert svc.last_decision.packed.algorithm == "two_op"
+    assert svc.post_warmup_compiles == 0
+
+
 # ---------------------------------------------------------------------------
 # Deadlines
 # ---------------------------------------------------------------------------
